@@ -1,0 +1,54 @@
+"""Shared benchmark helpers: timing, CSV emission, propagator setups."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import boundary, sources as S
+from repro.core.grid import Grid
+from repro.configs.base import PEAK_FLOPS_BF16, HBM_BW  # noqa: F401
+
+
+def time_fn(fn, *args, warmup=1, iters=3):
+    """Median wall time (s) of jitted fn; blocks on the result."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def acoustic_setup(n=32, order=4, nt=8, nsrc=1, seed=0):
+    shape = (n, n, n)
+    grid = Grid(shape=shape, spacing=(10.0,) * 3)
+    rng = np.random.RandomState(seed)
+    vp = np.full(shape, 2000.0)
+    m = jnp.asarray(1.0 / vp ** 2, jnp.float32)
+    damp = boundary.damping_field(shape, nbl=4, spacing=grid.spacing)
+    dt = grid.cfl_dt(2000.0, order)
+    ext = np.asarray(grid.extent)
+    src = S.SparseOperator(5.0 + rng.rand(nsrc, 3) * (ext - 10.0))
+    wav = S.ricker_wavelet(nt, dt, f0=12.0, num=nsrc)
+    g = S.precompute(src, grid, wav)
+    return grid, m, damp, dt, g
+
+
+# TPU-target per-point-step FLOP counts for the three paper kernels
+def flops_per_point(propagator: str, order: int) -> float:
+    from repro.core.propagators import acoustic, elastic, tti
+    fn = {"acoustic": acoustic, "tti": tti, "elastic": elastic}[propagator]
+    return fn.model_flops_per_step((1, 1, 1), order)
+
+
+# f32 fields read+written per point-step (no temporal blocking)
+FIELDS_RW = {"acoustic": 5, "tti": 12, "elastic": 22}

@@ -1,0 +1,51 @@
+"""Paper Fig. 11: cache-aware roofline for the isotropic acoustic kernel,
+space orders 4/8/12, spatially-blocked (red) vs temporally-blocked (yellow).
+
+TPU translation: arithmetic intensity = FLOPs / HBM byte; the TB schedule
+raises AI by ~T (minus overlap) exactly as the paper's scheme lifts kernels
+above the L3 ceiling.  Points are (AI, achievable GFLOP/s) with
+achievable = min(PEAK, AI * HBM_BW).
+Output CSV: kernel,order,schedule,AI,gflops
+"""
+from __future__ import annotations
+
+from benchmarks.common import HBM_BW, PEAK_FLOPS_BF16, emit, flops_per_point
+from benchmarks.fig9_speedup import READS, TB_WRITES
+from repro.core.temporal_blocking import autotune_plan
+
+
+def run(nz: int = 512):
+    rows = []
+    for order in (4, 8, 12):
+        f_pt = flops_per_point("acoustic", order)
+        bytes_sb = (READS["acoustic"] + WRITES_SB) * 4.0
+        ai_sb = f_pt / bytes_sb
+        g_sb = min(PEAK_FLOPS_BF16, ai_sb * HBM_BW) / 1e9
+        plan, _ = autotune_plan(nz=nz, radius=order // 2,
+                                flops_per_point=f_pt,
+                                fields=READS["acoustic"] + 1,
+                                read_fields=READS["acoustic"],
+                                write_fields=TB_WRITES["acoustic"])
+        bytes_tb = plan.hbm_bytes_per_point_step(
+            nz, read_fields=READS["acoustic"],
+            write_fields=TB_WRITES["acoustic"])
+        ai_tb = f_pt * plan.overlap_factor() / bytes_tb
+        g_tb = min(PEAK_FLOPS_BF16, ai_tb * HBM_BW) / 1e9
+        rows.append((order, ai_sb, g_sb, ai_tb, g_tb))
+        emit(f"fig11/acoustic-O{order}-sb", 0.0,
+             f"AI={ai_sb:.2f} gflops={g_sb:.0f}")
+        emit(f"fig11/acoustic-O{order}-tb", 0.0,
+             f"AI={ai_tb:.2f} gflops={g_tb:.0f} T={plan.T} "
+             f"tile={plan.tile}")
+    return rows
+
+
+WRITES_SB = 1
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Paper Fig. 9: temporal-blocking speedup vs spatially-blocked baseline,
+for {acoustic, TTI, elastic} x space order {4, 8, 12}.
+
+The paper measures Xeon wall-clock; this container has no TPU, so the
+TPU-target numbers are ROOFLINE-MODELED throughputs (GPoints/s):
+
+    thr(schedule) = min(PEAK / flops_pt(schedule), HBM_BW / bytes_pt(schedule))
+
+with bytes_pt(TB) from the trapezoidal traffic model (tile/T autotuned under
+the VMEM budget, as Table I collapses to on TPU) and flops_pt(TB) including
+the redundant-rim overlap factor.  Alongside, a MEASURED CPU wall-clock of
+the pure-JAX reference propagator is reported for scale (not a claim).
+Output CSV: kernel,order,thr_sb,thr_tb,modeled_speedup,cpu_gpts
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (FIELDS_RW, HBM_BW, PEAK_FLOPS_BF16,
+                               acoustic_setup, emit, flops_per_point,
+                               time_fn)
+from repro.core.temporal_blocking import autotune_plan
+
+
+# naive per-point-step field traffic (reads, writes) x f32
+READS = {"acoustic": 4, "tti": 10, "elastic": 13}
+WRITES = {"acoustic": 1, "tti": 2, "elastic": 9}
+# TB write-back: both time levels of every evolved field
+TB_WRITES = {"acoustic": 2, "tti": 4, "elastic": 9}
+
+
+def modeled_throughputs(propagator: str, order: int, nz: int = 512):
+    f_pt = flops_per_point(propagator, order)
+    reads, writes = READS[propagator], WRITES[propagator]
+    bytes_sb = (reads + writes) * 4.0
+    thr_sb = min(PEAK_FLOPS_BF16 / f_pt, HBM_BW / bytes_sb)
+
+    plan, _ = autotune_plan(
+        nz=nz, radius=order // 2, flops_per_point=f_pt,
+        fields=reads + 1, dtype_bytes=4,  # VMEM: all read windows + scratch
+        read_fields=reads, write_fields=TB_WRITES[propagator])
+    bytes_tb = plan.hbm_bytes_per_point_step(
+        nz, read_fields=reads, write_fields=TB_WRITES[propagator],
+        dtype_bytes=4)
+    f_tb = f_pt * plan.overlap_factor()
+    thr_tb = min(PEAK_FLOPS_BF16 / f_tb, HBM_BW / bytes_tb)
+    return thr_sb, thr_tb, plan
+
+
+def run(cpu_measure: bool = True, n: int = 32, nt: int = 8):
+    import jax.numpy as jnp
+    from repro.core.propagators import acoustic
+    rows = []
+    for prop in ("acoustic", "tti", "elastic"):
+        for order in (4, 8, 12):
+            thr_sb, thr_tb, plan = modeled_throughputs(prop, order)
+            cpu_gpts = 0.0
+            if cpu_measure and prop == "acoustic":
+                grid, m, damp, dt, g = acoustic_setup(n=n, order=order,
+                                                      nt=nt)
+                params = acoustic.AcousticParams(m=m, damp=damp)
+                state = acoustic.init_state(grid.shape)
+                fn = jax.jit(lambda s: acoustic.propagate(
+                    nt, s, params, g, dt, grid, order)[0].u)
+                t = time_fn(fn, state)
+                cpu_gpts = grid.npoints * nt / t / 1e9
+            speedup = thr_tb / thr_sb
+            # production picks the better schedule (paper SO-12: no TB gain)
+            chosen = "TB" if speedup > 1.0 else "SB"
+            rows.append((prop, order, thr_sb / 1e9, thr_tb / 1e9, speedup,
+                         cpu_gpts, plan))
+            emit(f"fig9/{prop}-O{order}", 0.0,
+                 f"thr_sb={thr_sb/1e9:.1f}GPt/s thr_tb={thr_tb/1e9:.1f}GPt/s "
+                 f"modeled_speedup={speedup:.2f}x chosen={chosen} "
+                 f"effective={max(speedup, 1.0):.2f}x "
+                 f"tile={plan.tile} T={plan.T} cpu={cpu_gpts:.3f}GPt/s")
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Merge dry-run JSON fragments into the canonical results file, replacing
+older records for the same (arch, shape, multi_pod) cell."""
+import argparse
+import json
+
+
+def merge(base_path: str, patch_paths, out_path: str):
+    base = json.load(open(base_path))
+    for p in patch_paths:
+        for rec in json.load(open(p)):
+            key = (rec["arch"], rec["shape"], rec["multi_pod"])
+            base = [r for r in base
+                    if (r["arch"], r["shape"], r["multi_pod"]) != key]
+            base.append(rec)
+    with open(out_path, "w") as f:
+        json.dump(base, f, indent=1)
+    ok = sum(r["status"] == "ok" for r in base)
+    sk = sum(r["status"] == "skipped" for r in base)
+    er = sum(r["status"] == "error" for r in base)
+    print(f"merged -> {out_path}: {ok} ok, {sk} skipped, {er} errors")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("base")
+    ap.add_argument("patches", nargs="*")
+    ap.add_argument("--out", required=True)
+    a = ap.parse_args()
+    merge(a.base, a.patches, a.out)

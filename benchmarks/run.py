@@ -1,0 +1,46 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement).
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip CPU wall-clock measurements")
+    args = ap.parse_args()
+
+    from benchmarks import (fig9_speedup, fig10_sources, fig11_roofline,
+                            lm_roofline, overhead_precompute,
+                            table1_autotune)
+
+    sections = [
+        ("fig9 (TB vs spatial-blocked speedup)",
+         lambda: fig9_speedup.run(cpu_measure=not args.fast)),
+        ("table1 (tile/T autotune)", table1_autotune.run),
+        ("fig10 (source-count corner cases)", fig10_sources.run),
+        ("fig11 (cache-aware roofline)", fig11_roofline.run),
+        ("overhead (precompute cost, paper §I.C)",
+         lambda: overhead_precompute.run(n=24, nt=4)),
+        ("lm_roofline (§Roofline table from dry-run)", lm_roofline.run),
+    ]
+    failed = 0
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            fn()
+        except Exception:
+            failed += 1
+            print(f"# SECTION FAILED: {title}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

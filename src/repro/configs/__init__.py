@@ -1,0 +1,49 @@
+"""Config registry: 10 assigned LM architectures + the paper's own stencil
+cases.  `get(name)` / `get_reduced(name)` / `ARCHS` are the public API."""
+from __future__ import annotations
+
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, MeshConfig, SHAPES, TRAIN_4K, PREFILL_32K,
+    DECODE_32K, LONG_500K, SINGLE_POD, MULTI_POD, shapes_for,
+    PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
+
+from repro.configs import (
+    llava_next_mistral_7b, granite_34b, qwen3_1p7b, qwen2_7b, stablelm_12b,
+    mamba2_130m, qwen3_moe_30b_a3b, dbrx_132b, zamba2_2p7b, whisper_medium)
+
+_MODULES = {
+    "llava-next-mistral-7b": llava_next_mistral_7b,
+    "granite-34b": granite_34b,
+    "qwen3-1.7b": qwen3_1p7b,
+    "qwen2-7b": qwen2_7b,
+    "stablelm-12b": stablelm_12b,
+    "mamba2-130m": mamba2_130m,
+    "qwen3-moe-30b-a3b": qwen3_moe_30b_a3b,
+    "dbrx-132b": dbrx_132b,
+    "zamba2-2.7b": zamba2_2p7b,
+    "whisper-medium": whisper_medium,
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return _MODULES[name].CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return _MODULES[name].REDUCED
+
+
+def all_cells():
+    """Every (arch, shape) benchmark cell, with inapplicable cells marked."""
+    cells = []
+    for name in ARCHS:
+        cfg = get(name)
+        for shape in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K):
+            applicable = shape.name != "long_500k" or \
+                cfg.family in ("ssm", "hybrid")
+            cells.append((name, shape.name, applicable))
+    return cells

@@ -1,0 +1,5 @@
+"""repro.core — the paper's contribution: grid-aligned precomputation of
+sparse off-the-grid operators enabling temporal blocking of FD stencils."""
+from repro.core.grid import Grid  # noqa: F401
+from repro.core import boundary, sources, stencil, temporal_blocking  # noqa: F401
+from repro.core.propagators import acoustic, elastic, tti  # noqa: F401

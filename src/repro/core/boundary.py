@@ -1,0 +1,49 @@
+"""Absorbing boundary layers (damping sponge), per the paper's §IV.B setup:
+"zero initial conditions and damping fields with absorbing boundary layers".
+
+We build the standard Devito-style damping profile: zero in the physical
+interior and growing like a cubic polynomial of the normalized depth into
+the sponge, scaled by vp/h so reflections of all velocities are absorbed.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def damping_field(shape: Tuple[int, ...], nbl: int, spacing: Tuple[float, ...],
+                  coeff: float = 1.5, dtype=jnp.float32,
+                  free_surface_axis: int | None = None) -> jnp.ndarray:
+    """Damping coefficient field, zero in the interior.
+
+    Args:
+      shape: full grid shape (including the `nbl`-deep sponge on every face).
+      nbl: number of absorbing boundary layers.
+      coeff: log(1/R)-style strength coefficient (Devito uses ~1.5 with R
+        the target reflection coefficient folded in).
+      free_surface_axis: if set, the *low* face of this axis gets no sponge
+        (free surface at the top of a seismic model).
+    """
+    if nbl == 0:
+        return jnp.zeros(shape, dtype)
+    damp = np.zeros(shape, np.float64)
+    for ax, n in enumerate(shape):
+        pos = np.arange(n, dtype=np.float64)
+        lo = np.clip((nbl - pos) / nbl, 0.0, 1.0)
+        hi = np.clip((pos - (n - 1 - nbl)) / nbl, 0.0, 1.0)
+        if free_surface_axis is not None and ax == free_surface_axis:
+            lo = np.zeros_like(lo)
+        prof = coeff * (lo ** 3 + hi ** 3) / min(spacing)
+        shape_b = [1] * len(shape)
+        shape_b[ax] = n
+        damp = np.maximum(damp, prof.reshape(shape_b) * np.ones(shape))
+    return jnp.asarray(damp, dtype)
+
+
+def pad_model(field: np.ndarray, nbl: int, mode: str = "edge") -> np.ndarray:
+    """Extend a physical model (e.g. velocity) into the sponge by edge copy."""
+    if nbl == 0:
+        return field
+    return np.pad(field, [(nbl, nbl)] * field.ndim, mode=mode)

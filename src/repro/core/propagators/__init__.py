@@ -1,0 +1,1 @@
+from repro.core.propagators import acoustic, elastic, tti  # noqa: F401

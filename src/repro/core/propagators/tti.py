@@ -1,0 +1,142 @@
+"""Anisotropic acoustic (TTI) pseudo-acoustic propagator (paper §III.B).
+
+Coupled system of two scalar PDEs (p, r) with a *rotated* anisotropic
+Laplacian parametrized by the (spatially varying) tilt angle theta and
+azimuth phi plus the Thomsen parameters epsilon, delta (Zhang et al. 2011
+formulation used by Devito's TTI examples):
+
+    m p_tt + damp p_t = (1 + 2 eps) H0(p) + sqrt(1 + 2 dlt) Hz(r) + q
+    m r_tt + damp r_t = sqrt(1 + 2 dlt) H0(p) +             Hz(r) + q
+
+with the rotated second-derivative operators built from rotated first
+derivatives (paper Eq. 2):
+
+    Dx~ = cos(th)cos(ph) dx + cos(th)sin(ph) dy - sin(th) dz
+    Dy~ = -sin(ph) dx + cos(ph) dy
+    Dz~ = sin(th)cos(ph) dx + sin(th)sin(ph) dy + cos(th) dz
+    Gxx = Dx~(Dx~ .), Gyy = Dy~(Dy~ .), Gzz = Dz~(Dz~ .)
+    H0 = Gxx + Gyy,  Hz = Gzz
+
+This "increases the operation count drastically" (paper §III.B): each G is
+two passes of three first-derivative stencils — the compute-heavy end of the
+paper's kernel spectrum.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sources as src_mod
+from repro.core import stencil as st
+from repro.core.grid import Grid
+
+
+class TTIParams(NamedTuple):
+    m: jnp.ndarray        # squared slowness
+    damp: jnp.ndarray
+    epsilon: jnp.ndarray  # Thomsen epsilon
+    delta: jnp.ndarray    # Thomsen delta
+    theta: jnp.ndarray    # tilt (rotation around z)
+    phi: jnp.ndarray      # azimuth (rotation around y)
+
+
+class TTIState(NamedTuple):
+    p: jnp.ndarray
+    p_prev: jnp.ndarray
+    r: jnp.ndarray
+    r_prev: jnp.ndarray
+
+
+def init_state(shape: Tuple[int, ...], dtype=jnp.float32) -> TTIState:
+    z = jnp.zeros(shape, dtype)
+    return TTIState(z, z, z, z)
+
+
+def _rotated_dirs(params: TTIParams):
+    ct, sth = jnp.cos(params.theta), jnp.sin(params.theta)
+    cp, sph = jnp.cos(params.phi), jnp.sin(params.phi)
+    dx_w = (ct * cp, ct * sph, -sth)     # Dx~ direction cosines
+    dy_w = (-sph, cp, jnp.zeros_like(cp))
+    dz_w = (sth * cp, sth * sph, ct)
+    return dx_w, dy_w, dz_w
+
+
+def _dir_derivative(u, w3, spacing, order):
+    out = None
+    for ax, (wd, h) in enumerate(zip(w3, spacing)):
+        term = wd * st.first_derivative(u, ax, h, order)
+        out = term if out is None else out + term
+    return out
+
+
+def rotated_laplacians(u: jnp.ndarray, params: TTIParams,
+                       spacing: Tuple[float, ...], order: int):
+    """(H0, Hz)(u) — the rotated horizontal/vertical Laplacians."""
+    dx_w, dy_w, dz_w = _rotated_dirs(params)
+    gxx = _dir_derivative(_dir_derivative(u, dx_w, spacing, order),
+                          dx_w, spacing, order)
+    gyy = _dir_derivative(_dir_derivative(u, dy_w, spacing, order),
+                          dy_w, spacing, order)
+    gzz = _dir_derivative(_dir_derivative(u, dz_w, spacing, order),
+                          dz_w, spacing, order)
+    return gxx + gyy, gzz
+
+
+def stencil_update(state: TTIState, params: TTIParams, dt: float,
+                   spacing: Tuple[float, ...], order: int):
+    p, p_prev, r, r_prev = state
+    dt = jnp.asarray(dt, p.dtype)
+    h0_p, hz_p = rotated_laplacians(p, params, spacing, order)
+    h0_r, hz_r = rotated_laplacians(r, params, spacing, order)
+    e_fac = 1.0 + 2.0 * params.epsilon
+    d_fac = jnp.sqrt(1.0 + 2.0 * params.delta)
+    den = params.m + params.damp * dt
+
+    rhs_p = e_fac * h0_p + d_fac * hz_r
+    rhs_r = d_fac * h0_p + hz_r
+    p_next = (dt * dt * rhs_p + params.m * (2.0 * p - p_prev)
+              + params.damp * dt * p) / den
+    r_next = (dt * dt * rhs_r + params.m * (2.0 * r - r_prev)
+              + params.damp * dt * r) / den
+    return p_next, r_next
+
+
+def step(state: TTIState, t: jnp.ndarray, params: TTIParams,
+         g: Optional[src_mod.GriddedSources], dt: float,
+         spacing: Tuple[float, ...], order: int) -> TTIState:
+    p_next, r_next = stencil_update(state, params, dt, spacing, order)
+    if g is not None:
+        scale = (dt * dt) / src_mod.point_scale(params.m, g)
+        p_next = src_mod.inject(p_next, g, t, scale=scale)
+        r_next = src_mod.inject(r_next, g, t, scale=scale)
+    return TTIState(p_next, state.p, r_next, state.r)
+
+
+def propagate(nt: int, state: TTIState, params: TTIParams,
+              g: Optional[src_mod.GriddedSources], dt: float, grid: Grid,
+              order: int,
+              receivers: Optional[src_mod.GriddedReceivers] = None):
+    spacing = grid.spacing
+
+    def body(carry, t):
+        nxt = step(carry, t, params, g, dt, spacing, order)
+        rec = (src_mod.interpolate(nxt.p, receivers)
+               if receivers is not None else jnp.zeros((0,), nxt.p.dtype))
+        return nxt, rec
+
+    final, recs = jax.lax.scan(body, state, jnp.arange(nt))
+    return final, (recs if receivers is not None else None)
+
+
+def model_flops_per_step(shape: Tuple[int, ...], order: int) -> int:
+    import numpy as np
+    taps = order + 1
+    d1 = 2 * taps - 1                       # one first-derivative stencil
+    # per field: 2 rotated laplacians, each = 2 passes x 3 dir-derivs x
+    # (stencil + 2 muladd for direction weights); 2 fields + pointwise.
+    per_g = 2 * 3 * (d1 + 4)
+    per_field = 3 * per_g
+    pointwise = 40
+    return int(np.prod(shape)) * (2 * per_field + pointwise)

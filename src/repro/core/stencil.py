@@ -1,0 +1,168 @@
+"""Finite-difference stencil machinery.
+
+Arbitrary-(even)-order central and staggered FD weights, plus the shifted
+array application used by every propagator.  Weights are computed once in
+float64 with numpy (trace-time constants); applications are pure jnp.
+
+Boundary convention: all operators act on arrays zero-padded by the stencil
+radius (homogeneous Dirichlet halo) — the same convention the Pallas kernels
+and the halo-exchange path use, so the oracle and the kernels agree exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Weight generation (numpy, trace time)
+# ---------------------------------------------------------------------------
+
+def fd_weights(offsets: Sequence[float], deriv: int) -> np.ndarray:
+    """FD weights for the `deriv`-th derivative on arbitrary point offsets.
+
+    Solves the Vandermonde moment system sum_k w_k off_k^i / i! = delta(i,
+    deriv); exact for polynomials up to degree len(offsets)-1.  Offsets are
+    in units of the grid spacing; resulting weights must be scaled by
+    h**-deriv by the caller.
+    """
+    import math
+
+    offsets = np.asarray(offsets, dtype=np.float64)
+    n = offsets.size
+    if deriv >= n:
+        raise ValueError(f"need more than {n} points for derivative {deriv}")
+    # Taylor: sum_k w_k f(x + off_k h) = sum_i f^(i)(x) h^i / i! sum_k w_k off_k^i
+    # Require sum_k w_k off_k^i = deriv! * delta(i, deriv)  for i = 0..n-1.
+    A = np.vander(offsets, n, increasing=True).T  # A[i, k] = off_k**i
+    b = np.zeros(n)
+    b[deriv] = math.factorial(deriv)
+    return np.linalg.solve(A, b)
+
+
+@functools.lru_cache(maxsize=None)
+def second_derivative_weights(order: int) -> np.ndarray:
+    """Central weights for d2/dx2, half-width r = order//2 (2r+1 taps)."""
+    if order % 2 != 0 or order < 2:
+        raise ValueError(f"space order must be even >= 2, got {order}")
+    r = order // 2
+    offs = tuple(range(-r, r + 1))
+    return fd_weights(offs, 2)
+
+
+@functools.lru_cache(maxsize=None)
+def first_derivative_weights(order: int) -> np.ndarray:
+    """Central weights for d/dx, half-width r = order//2 (2r+1 taps)."""
+    if order % 2 != 0 or order < 2:
+        raise ValueError(f"space order must be even >= 2, got {order}")
+    r = order // 2
+    offs = tuple(range(-r, r + 1))
+    return fd_weights(offs, 1)
+
+
+@functools.lru_cache(maxsize=None)
+def staggered_first_derivative_weights(order: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Staggered d/dx weights evaluated at half-points.
+
+    Returns (offsets, weights) with offsets at ±1/2, ±3/2, ... — the
+    classic velocity–stress leapfrog taps (paper Fig. 8b multi-grid case).
+    `order` is the number of taps (= formal order for smooth fields).
+    """
+    if order % 2 != 0 or order < 2:
+        raise ValueError(f"staggered order must be even >= 2, got {order}")
+    half = order // 2
+    offs = np.array([k + 0.5 for k in range(-half, half)])
+    return offs, fd_weights(tuple(offs), 1)
+
+
+def radius(order: int) -> int:
+    return order // 2
+
+
+# ---------------------------------------------------------------------------
+# Shifted-slice application (Dirichlet halo)
+# ---------------------------------------------------------------------------
+
+def shifted(u: jnp.ndarray, shift: int, axis: int, pad: int) -> jnp.ndarray:
+    """`u` shifted by `shift` along `axis`, zero-filled outside the domain.
+
+    Implemented as a static slice of a zero-padded array so XLA fuses the
+    whole stencil into one loop nest.
+    """
+    if shift == 0:
+        return u
+    padding = [(0, 0)] * u.ndim
+    padding[axis] = (pad, pad)
+    up = jnp.pad(u, padding)
+    idx = [slice(None)] * u.ndim
+    idx[axis] = slice(pad + shift, pad + shift + u.shape[axis])
+    return up[tuple(idx)]
+
+
+def apply_axis_stencil(u: jnp.ndarray, weights: np.ndarray, axis: int,
+                       h: float, deriv: int) -> jnp.ndarray:
+    """Apply a 1-D stencil with integer offsets centred at 0 along `axis`."""
+    r = (len(weights) - 1) // 2
+    padding = [(0, 0)] * u.ndim
+    padding[axis] = (r, r)
+    up = jnp.pad(u, padding)
+    acc = None
+    scale = float(h) ** (-deriv)
+    for k, w in enumerate(weights):
+        if w == 0.0:
+            continue
+        shift = k - r
+        idx = [slice(None)] * u.ndim
+        idx[axis] = slice(r + shift, r + shift + u.shape[axis])
+        term = up[tuple(idx)] * jnp.asarray(w * scale, dtype=u.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def laplacian(u: jnp.ndarray, spacing: Sequence[float], order: int) -> jnp.ndarray:
+    """order-`order` Laplacian over all dims of `u` (the paper's A(t,x,y,z))."""
+    w = second_derivative_weights(order)
+    out = None
+    for ax, h in enumerate(spacing):
+        term = apply_axis_stencil(u, w, ax, h, 2)
+        out = term if out is None else out + term
+    return out
+
+
+def first_derivative(u: jnp.ndarray, axis: int, h: float, order: int) -> jnp.ndarray:
+    """Central first derivative along one axis."""
+    return apply_axis_stencil(u, first_derivative_weights(order), axis, h, 1)
+
+
+def staggered_derivative(u: jnp.ndarray, axis: int, h: float, order: int,
+                         shift: int) -> jnp.ndarray:
+    """Staggered first derivative along `axis`, evaluated at points offset by
+    `shift` ∈ {+1, -1} half-cells (forward / backward staggering).
+
+    With taps at ±1/2, ±3/2, ... the forward (+1) variant evaluates d/dx at
+    i+1/2 using points i+1-half..i+half, expressed on the integer grid by
+    shifting tap offsets by +1/2; backward (-1) by -1/2.
+    """
+    offs, w = staggered_first_derivative_weights(order)
+    int_offsets = np.round(offs + 0.5 * shift).astype(int)
+    r = int(np.max(np.abs(int_offsets)))
+    padding = [(0, 0)] * u.ndim
+    padding[axis] = (r, r)
+    up = jnp.pad(u, padding)
+    acc = None
+    scale = float(h) ** (-1)
+    for off, wk in zip(int_offsets, w):
+        idx = [slice(None)] * u.ndim
+        idx[axis] = slice(r + off, r + off + u.shape[axis])
+        term = up[tuple(idx)] * jnp.asarray(wk * scale, dtype=u.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def stencil_flops_per_point(order: int, ndim: int = 3) -> int:
+    """FLOPs of one Laplacian application per grid point (for rooflines)."""
+    taps = order + 1
+    return ndim * (2 * taps - 1)

@@ -1,0 +1,182 @@
+"""Temporal blocking schedules (paper §II.B, adapted to TPU — DESIGN.md §2).
+
+Three layers:
+
+1. `TimeTileSchedule` — splits the nt-step time loop into depth-T tiles
+   (the outer `t_tile` loop of the paper's Listing 6).
+2. `tiled_propagate` — a generic driver that runs any per-timestep `step_fn`
+   tile-by-tile (scan over tiles, unrolled/fori inner loop).  On a single
+   device this is mathematically identical to the naive scan — the paper's
+   correctness contract — while giving the compiler the tile structure the
+   Pallas kernel and the distributed deep-halo exchange exploit.
+3. Analytical HBM-traffic/overlap models for the trapezoidal VMEM schedule —
+   the TPU replacement for the paper's cache-aware roofline reasoning, used
+   by the autotuner (`benchmarks/table1_autotune.py`) and §Roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeTileSchedule:
+    """nt timesteps split into ceil(nt/T) tiles of depth <= T."""
+
+    nt: int
+    T: int
+
+    def __post_init__(self):
+        if self.T < 1:
+            raise ValueError("time tile depth must be >= 1")
+
+    @property
+    def num_tiles(self) -> int:
+        return -(-self.nt // self.T)
+
+    @property
+    def padded_nt(self) -> int:
+        return self.num_tiles * self.T
+
+    def tile_starts(self) -> np.ndarray:
+        return np.arange(self.num_tiles) * self.T
+
+
+def tiled_propagate(step_fn: Callable, nt: int, T: int, state,
+                    per_step_out: Callable = None):
+    """Run `state = step_fn(state, t)` for t in [0, nt) in depth-T time tiles.
+
+    `per_step_out(state, t)` optionally collects a per-timestep output (e.g.
+    receiver samples); outputs for padded steps (t >= nt) are masked to zero
+    and the state update is suppressed, so results are independent of T.
+    Returns (final_state, outs) with outs stacked over the padded time axis
+    and then truncated to nt.
+    """
+    sched = TimeTileSchedule(nt, T)
+
+    def one_step(carry, t):
+        nxt = step_fn(carry, t)
+        valid = t < nt
+        nxt = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(valid, a, b), nxt, carry)
+        if per_step_out is not None:
+            out = per_step_out(nxt, t)
+            out = jax.tree_util.tree_map(
+                lambda o: jnp.where(valid, o, jnp.zeros_like(o)), out)
+        else:
+            out = ()
+        return nxt, out
+
+    def one_tile(carry, tile_idx):
+        t0 = tile_idx * T
+        ts = t0 + jnp.arange(T)
+        carry, outs = jax.lax.scan(one_step, carry, ts)
+        return carry, outs
+
+    final, outs = jax.lax.scan(one_tile, state, jnp.arange(sched.num_tiles))
+    if per_step_out is not None:
+        outs = jax.tree_util.tree_map(
+            lambda o: o.reshape((sched.padded_nt,) + o.shape[2:])[:nt], outs)
+    else:
+        outs = None
+    return final, outs
+
+
+# ---------------------------------------------------------------------------
+# Trapezoidal VMEM time-tiling cost model (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TBPlan:
+    """A (tile_x, tile_y, T) choice for the Pallas TB kernel."""
+
+    tile: Tuple[int, int]
+    T: int
+    radius: int
+
+    @property
+    def halo(self) -> int:
+        return self.T * self.radius
+
+    def window(self, nz: int) -> Tuple[int, int, int]:
+        tx, ty = self.tile
+        return (tx + 2 * self.halo, ty + 2 * self.halo, nz)
+
+    def overlap_factor(self) -> float:
+        """Redundant-compute multiplier of the trapezoid: window area over
+        tile area, averaged over the T steps actually computed.
+
+        Step k computes the window shrunk by k*r per side (we only need
+        values valid for the final centre), so compute per point-step is
+        sum_k prod_d (tile_d + 2*(T-k)*r) / (T * prod_d tile_d)."""
+        tx, ty = self.tile
+        r = self.radius
+        tot = 0.0
+        for k in range(self.T):
+            m = (self.T - k) * r
+            tot += (tx + 2 * m) * (ty + 2 * m)
+        return tot / (self.T * tx * ty)
+
+    def vmem_bytes(self, nz: int, fields: int = 5, dtype_bytes: int = 4) -> int:
+        """Resident bytes: `fields` window-sized buffers (u0, u1, m, damp,
+        scratch for the acoustic kernel)."""
+        wx, wy, wz = self.window(nz)
+        return wx * wy * wz * dtype_bytes * fields
+
+    def hbm_bytes_per_point_step(self, nz: int, read_fields: int = 4,
+                                 write_fields: int = 1,
+                                 dtype_bytes: int = 4) -> float:
+        """HBM bytes moved per grid-point-timestep: the window is read and
+        the centre written once per T steps."""
+        tx, ty = self.tile
+        wx, wy, _ = self.window(nz)
+        read = wx * wy * nz * read_fields * dtype_bytes
+        write = tx * ty * nz * write_fields * dtype_bytes
+        return (read + write) / (tx * ty * nz * self.T)
+
+
+def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
+                  tiles=(16, 32, 64, 128, 256), depths=(1, 2, 4, 8, 16),
+                  fields: int = 5, dtype_bytes: int = 4,
+                  flops_per_point: float = 40.0,
+                  read_fields: int = None, write_fields: int = None,
+                  peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                  ) -> Tuple[TBPlan, dict]:
+    """Pick (tile, T) minimizing modeled time/point-step under the VMEM cap —
+    the TPU collapse of the paper's Table-I autotuning sweep.
+
+    time/point-step = max(compute, memory):
+      compute = overlap_factor * flops_per_point / peak_flops
+      memory  = hbm_bytes_per_point_step / hbm_bw
+
+    T=1 (no temporal blocking) is in the sweep, so kernels where TB cannot
+    win (high space order: overlap growth beats traffic savings — the
+    paper's SO-12 result) autotune back to the spatially-blocked schedule.
+    """
+    read_fields = fields - 1 if read_fields is None else read_fields
+    write_fields = 1 if write_fields is None else write_fields
+    best, best_cost, log = None, math.inf, {}
+    for tx in tiles:
+        for ty in tiles:
+            for T in depths:
+                plan = TBPlan((tx, ty), T, radius)
+                if plan.vmem_bytes(nz, fields, dtype_bytes) > vmem_budget:
+                    continue
+                comp = plan.overlap_factor() * flops_per_point / peak_flops
+                mem = plan.hbm_bytes_per_point_step(
+                    nz, read_fields=read_fields, write_fields=write_fields,
+                    dtype_bytes=dtype_bytes) / hbm_bw
+                cost = max(comp, mem)
+                log[(tx, ty, T)] = {"compute_s": comp, "memory_s": mem,
+                                    "cost_s": cost,
+                                    "overlap": plan.overlap_factor()}
+                if cost < best_cost:
+                    best, best_cost = plan, cost
+    if best is None:
+        raise ValueError("no plan fits the VMEM budget")
+    return best, log

@@ -1,0 +1,224 @@
+"""Distributed wave propagation: domain decomposition + deep-halo exchange.
+
+The paper's enabling transformation (grid-aligned sources) composes directly
+with distribution: after alignment, injection is a *local* operation on
+whichever shard owns (or halos) the affected points, so a time tile of depth
+T needs exactly ONE neighbor exchange of depth H = T*r — temporal blocking
+applied to communication (DESIGN.md §4).  Redundant rim compute on each
+device buys a T-fold reduction in exchange count, the multi-chip analogue
+of the VMEM trapezoid in `kernels/stencil_tb.py`.
+
+Mesh layout: grid x -> "data" axis, grid y -> "model" axis (and x also over
+"pod" when present, folded into "data" by the caller).  Exchanges are
+`lax.ppermute` shifts; missing neighbors (domain boundary) produce zeros =
+the Dirichlet convention shared by the reference and the Pallas kernel.
+
+Overlap note: within a time tile the first local step only needs the halo
+for its outermost r cells; XLA's latency-hiding scheduler can overlap the
+ppermute with interior compute.  The collective schedule is inspected in
+EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import sources as src_mod
+from repro.core import stencil as st
+
+
+def _shift_from_low(x, h: int, axis_name: str, dim: int):
+    """Every device sends its LAST h slices to the next device (axis order);
+    device 0's halo comes back as zeros (Dirichlet)."""
+    n = jax.lax.axis_size(axis_name)
+    sl = [slice(None)] * x.ndim
+    sl[dim] = slice(x.shape[dim] - h, None)
+    piece = x[tuple(sl)]
+    if n == 1:
+        return jnp.zeros_like(piece)
+    return jax.lax.ppermute(piece, axis_name,
+                            perm=[(i, i + 1) for i in range(n - 1)])
+
+
+def _shift_from_high(x, h: int, axis_name: str, dim: int):
+    n = jax.lax.axis_size(axis_name)
+    sl = [slice(None)] * x.ndim
+    sl[dim] = slice(0, h)
+    piece = x[tuple(sl)]
+    if n == 1:
+        return jnp.zeros_like(piece)
+    return jax.lax.ppermute(piece, axis_name,
+                            perm=[(i + 1, i) for i in range(n)
+                                  if i + 1 <= n - 1])
+
+
+def halo_exchange(x, h: int, axis_name: str, dim: int):
+    """Pad the local block with depth-h halos from both neighbors."""
+    lo = _shift_from_low(x, h, axis_name, dim)
+    hi = _shift_from_high(x, h, axis_name, dim)
+    return jnp.concatenate([lo, x, hi], axis=dim)
+
+
+def halo_exchange_2d(x, h: int, ax_x: str, ax_y: str):
+    """x then y (the second exchange carries the x-halo -> corners filled)."""
+    x = halo_exchange(x, h, ax_x, 0)
+    return halo_exchange(x, h, ax_y, 1)
+
+
+class DistAcoustic(NamedTuple):
+    """Static setup for the distributed propagator."""
+
+    mesh: Mesh
+    grid_shape: Tuple[int, int, int]
+    order: int
+    T: int
+    dt: float
+    spacing: Tuple[float, float, float]
+    ax_x: str
+    ax_y: str
+
+    @property
+    def halo(self) -> int:
+        return self.T * (self.order // 2)
+
+
+def _local_domain_mask(setup: DistAcoustic, shape_local, dtype):
+    """1.0 inside the global domain for the halo-padded local block."""
+    h = setup.halo
+    nx, ny, _ = setup.grid_shape
+    px = jax.lax.axis_index(setup.ax_x)
+    py = jax.lax.axis_index(setup.ax_y)
+    bx = shape_local[0] - 2 * h
+    by = shape_local[1] - 2 * h
+    gx = px * bx - h + jax.lax.broadcasted_iota(jnp.int32, shape_local, 0)
+    gy = py * by - h + jax.lax.broadcasted_iota(jnp.int32, shape_local, 1)
+    ok = (gx >= 0) & (gx < nx) & (gy >= 0) & (gy < ny)
+    return ok.astype(dtype)
+
+
+def _tile_body(setup: DistAcoustic, u0, u1, m_pad, damp_pad, scale_pad,
+               sm_pad, sid_pad, src_tile):
+    """One depth-T time tile on halo-padded local blocks.
+
+    src_tile: (T, npts) slice of src_dcmp for this tile's timesteps
+    (replicated).  Returns the cropped (un-padded) new (u0, u1).
+    """
+    h = setup.halo
+    dt = jnp.asarray(setup.dt, u1.dtype)
+    u0p = halo_exchange_2d(u0, h, setup.ax_x, setup.ax_y)
+    u1p = halo_exchange_2d(u1, h, setup.ax_x, setup.ax_y)
+    dom = _local_domain_mask(setup, u1p.shape, u1.dtype)
+    den = m_pad + damp_pad * dt
+    safe_sid = jnp.maximum(sid_pad, 0)
+    smf = sm_pad.astype(u1.dtype)
+
+    for k in range(setup.T):
+        lap = st.laplacian(u1p, setup.spacing, setup.order)
+        u_next = (dt * dt * lap + m_pad * (2.0 * u1p - u0p)
+                  + damp_pad * dt * u1p) / den
+        u_next = u_next * dom
+        # fused grid-aligned injection (paper Listing 4), local by
+        # construction: gather from the replicated decomposed wavelets
+        inc = src_tile[k][safe_sid] * smf * scale_pad
+        u_next = u_next + inc.astype(u_next.dtype)
+        u0p, u1p = u1p, u_next
+
+    crop = (slice(h, u1p.shape[0] - h), slice(h, u1p.shape[1] - h),
+            slice(None))
+    return u0p[crop], u1p[crop]
+
+
+def distributed_propagate(setup: DistAcoustic, nt: int, u0, u1, m, damp,
+                          g: Optional[src_mod.GriddedSources],
+                          receivers: Optional[src_mod.GriddedReceivers] = None):
+    """Temporally-blocked distributed propagation.
+
+    u0/u1/m/damp are GLOBAL arrays (sharded or not — jit handles layout via
+    the shard_map specs).  Receivers are interpolated every T steps (tile
+    granularity) on the global sharded field; per-step receivers require
+    T=1 (documented trade-off of the distributed schedule).
+
+    Returns ((u0, u1) final, recs (num_tiles, nrec) | None).
+    """
+    if nt % setup.T:
+        raise ValueError(f"nt={nt} must divide by T={setup.T}")
+    h = setup.halo
+    mesh = setup.mesh
+    px = mesh.shape[setup.ax_x]
+    py = mesh.shape[setup.ax_y]
+    bx = setup.grid_shape[0] // px
+    by = setup.grid_shape[1] // py
+    if h > min(bx, by):
+        raise ValueError(
+            f"halo depth T*r={h} exceeds local block ({bx}, {by}); "
+            f"single-hop neighbor exchange requires T*r <= block — lower T "
+            f"or use a coarser decomposition")
+    spec = P(setup.ax_x, setup.ax_y, None)
+
+    # static per-shard fields, halo-padded once (they are time-invariant)
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(spec, spec),
+        out_specs=(spec, spec))
+    def prepare(m_l, damp_l):
+        m_p = halo_exchange_2d(m_l, h, setup.ax_x, setup.ax_y)
+        damp_p = halo_exchange_2d(damp_l, h, setup.ax_x, setup.ax_y)
+        m_safe = jnp.where(m_p == 0, 1.0, m_p)  # zeros only outside domain
+        return m_safe, damp_p
+
+    if g is not None:
+        sm = g.sm
+        sid = g.sid
+        scale_field = (setup.dt ** 2) / jnp.where(m == 0, 1.0, m)
+        src_dcmp = g.src_dcmp
+    else:
+        sm = jnp.zeros(setup.grid_shape, jnp.uint8)
+        sid = jnp.full(setup.grid_shape, -1, jnp.int32)
+        scale_field = jnp.zeros(setup.grid_shape, m.dtype)
+        src_dcmp = jnp.zeros((nt, 1), m.dtype)
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=(spec, spec, spec))
+    def prepare_src(sm_l, sid_l, scale_l):
+        sm_p = halo_exchange_2d(sm_l.astype(jnp.int32), h, setup.ax_x,
+                                setup.ax_y)
+        # sid halo: exchange sid+1 so missing neighbors (zeros) decode to -1
+        sid_p = halo_exchange_2d(sid_l + 1, h, setup.ax_x, setup.ax_y) - 1
+        scale_p = halo_exchange_2d(scale_l, h, setup.ax_x, setup.ax_y)
+        return sm_p, sid_p, scale_p
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(spec, spec, spec, spec, spec, spec, spec, P(None, None)),
+        out_specs=(spec, spec))
+    def tile(u0_l, u1_l, m_p, damp_p, scale_p, sm_p, sid_p, src_tile):
+        return _tile_body(setup, u0_l, u1_l, m_p, damp_p, scale_p, sm_p,
+                          sid_p, src_tile)
+
+    # NOTE: prepare pads along both axes => padded shapes; keep as separate
+    # arrays threaded through the scan (they are small relative to u).
+    m_p, damp_p = prepare(m, damp)
+    sm_p, sid_p, scale_p = prepare_src(sm, sid, scale_field)
+
+    num_tiles = nt // setup.T
+
+    def body(carry, tile_idx):
+        u0c, u1c = carry
+        t0 = tile_idx * setup.T
+        src_tile = jax.lax.dynamic_slice(
+            src_dcmp, (t0, 0), (setup.T, src_dcmp.shape[1]))
+        u0n, u1n = tile(u0c, u1c, m_p, damp_p, scale_p, sm_p, sid_p,
+                        src_tile)
+        rec = (src_mod.interpolate(u1n, receivers)
+               if receivers is not None else jnp.zeros((0,), u1n.dtype))
+        return (u0n, u1n), rec
+
+    (u0f, u1f), recs = jax.lax.scan(body, (u0, u1), jnp.arange(num_tiles))
+    return (u0f, u1f), (recs if receivers is not None else None)

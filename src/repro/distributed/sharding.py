@@ -1,0 +1,270 @@
+"""Sharding rules: DP / TP / EP / SP / ZeRO-1 / FSDP over a named mesh.
+
+One object owns every PartitionSpec decision so models, the train loop, the
+serving engine, and the dry-run agree:
+
+  * **DP**: batch over ("pod", "data") — hierarchical data parallelism
+    (gradient all-reduce runs ICI-first then across pods).
+  * **TP**: Megatron column/row sharding of attention heads and FFN over
+    "model"; vocab-sharded embedding/lm_head.
+  * **EP**: MoE expert dim over "model" (dispatch collectives inserted by
+    GSPMD from the (E, C, D) buffer constraint).
+  * **FSDP** (optional): every param additionally sharded over "data" on its
+    largest free divisible dim; GSPMD all-gathers weights just-in-time.
+    Required for >=30B-param archs on 16 GB/chip.
+  * **SP** (optional): sequence dim of residual activations over "model"
+    (Megatron sequence parallelism; all-gather before attention).
+  * **ZeRO-1**: optimizer master/moments always sharded over "data" even
+    when fsdp=False for params.
+  * Decode fallback: when batch < dp size (long_500k has batch 1), caches
+    shard their *sequence* dim over "data" instead.
+
+Dims that do not divide evenly by the axis size are replicated (e.g. MQA's
+single KV head).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Mesh
+    cfg: ModelConfig
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    fsdp: bool = False
+    sp: bool = False
+
+    # -- helpers -------------------------------------------------------------
+    def axis_size(self, name) -> int:
+        if isinstance(name, tuple):
+            return int(np.prod([self.axis_size(n) for n in name]))
+        return self.mesh.shape[name]
+
+    @property
+    def dp(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.dp_axes if a in self.mesh.shape)
+
+    @property
+    def dp_size(self) -> int:
+        return self.axis_size(self.dp)
+
+    @property
+    def tp_size(self) -> int:
+        return self.axis_size(self.tp_axis)
+
+    def _shard_if(self, dim: int, axis) -> Optional[str]:
+        return axis if dim % self.axis_size(axis) == 0 else None
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # -- activation constraints ----------------------------------------------
+    def constrain(self, x, tag: str):
+        spec = self.activation_spec(x, tag)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(spec))
+
+    def activation_spec(self, x, tag: str) -> Optional[P]:
+        dp = self.dp if x.shape[0] % max(self.dp_size, 1) == 0 else None
+        tp = self.tp_axis
+        if tag == "act_model":            # (B, S, D)
+            seq = tp if (self.sp and x.shape[1] % self.tp_size == 0) else None
+            return P(dp, seq, None)
+        if tag == "act_heads":            # (B, S, H, hd)
+            return P(dp, None, self._shard_if(x.shape[2], tp), None)
+        if tag == "act_kv_heads":
+            return P(dp, None, self._shard_if(x.shape[2], tp), None)
+        if tag == "act_ff":               # (B, S, F)
+            return P(dp, None, self._shard_if(x.shape[2], tp))
+        if tag == "act_vocab":            # (B, S, V)
+            return P(dp, None, self._shard_if(x.shape[2], tp))
+        if tag == "moe_expert_batch":     # (E, C, D)
+            return P(self._shard_if(x.shape[0], tp), None, None)
+        if tag == "moe_expert_batch_g":   # (G, E, C, D): G over dp, E over tp
+            gdp = self.dp if x.shape[0] % max(self.dp_size, 1) == 0 else None
+            return P(gdp, self._shard_if(x.shape[1], tp), None, None)
+        return None
+
+    # -- parameter specs -----------------------------------------------------
+    def param_pspecs(self, param_tree):
+        """PartitionSpec pytree for a (stacked) parameter tree."""
+        def assign(path, leaf):
+            return self._param_spec(path, leaf)
+        return jax.tree_util.tree_map_with_path(assign, param_tree)
+
+    def _param_spec(self, path, leaf) -> P:
+        name = _leaf_name(path)
+        shape = leaf.shape
+        tp = self.tp_axis
+        spec = [None] * len(shape)
+
+        def put(dim, axis):
+            if 0 <= dim < len(shape) and spec[dim] is None and \
+                    shape[dim] % self.axis_size(axis) == 0:
+                spec[dim] = axis
+                return True
+            return False
+
+        nd = len(shape)
+        if name in ("embedding",):            # (V, D)
+            put(nd - 2, tp)
+        elif name in ("lm_head",):            # (D, V)
+            put(nd - 1, tp)
+        elif name == "wq":                    # (L?, D, H, hd)
+            put(nd - 2, tp)
+        elif name in ("wk", "wv"):            # (L?, D, Hkv, hd)
+            put(nd - 2, tp)
+        elif name == "wo":                    # (L?, H, hd, D)
+            put(nd - 3, tp)
+        elif name in ("bq", "bk", "bv"):      # (L?, H, hd)
+            put(nd - 2, tp)
+        elif name in ("w_gate", "w_up"):
+            if name in ("w_gate", "w_up") and nd >= 4:   # MoE (L?, E, D, F)
+                put(nd - 3, tp)               # expert parallelism
+            else:                             # dense (L?, D, F)
+                put(nd - 1, tp)
+        elif name == "w_down":
+            if nd >= 4:                       # MoE (L?, E, F, D)
+                put(nd - 3, tp)
+            else:                             # (L?, F, D)
+                put(nd - 2, tp)
+        elif name == "w_in":                  # (L?, D, F)
+            put(nd - 1, tp)
+        elif name == "w_out":                 # (L?, F, D)
+            put(nd - 2, tp)
+        elif name in ("b_in",):               # (L?, F)
+            put(nd - 1, tp)
+        elif name in ("in_z", "in_x", "in_bc"):  # mamba col-parallel (…, D, X)
+            put(nd - 1, tp)
+        elif name == "out_proj":              # mamba row-parallel (…, d_i, D)
+            put(nd - 2, tp)
+        elif name in ("conv_x_w", "conv_bc_w", "conv_x_b", "conv_bc_b"):
+            put(nd - 1, tp)                   # depthwise conv (…, W, C)
+        # in_dt (…, D, H): H rarely divides tp — replicated
+        # norms / scalars / router / pos-embeds: replicated on tp
+
+        if self.fsdp:
+            # additionally shard the largest free divisible dim over "data"
+            order = sorted(range(len(shape)), key=lambda d: -shape[d])
+            for d in order:
+                if shape[d] >= 1024 and put(d, self.dp):
+                    break
+        return P(*spec)
+
+    def param_shardings(self, param_tree):
+        return jax.tree_util.tree_map(
+            self.named, self.param_pspecs(param_tree))
+
+    # -- optimizer state (ZeRO-1) ---------------------------------------------
+    def opt_pspecs(self, opt_state):
+        """Same layout as params, plus 'data'-sharding of the largest free
+        dim of every moment/master leaf (ZeRO-1)."""
+        from repro.optim.adamw import AdamWState
+
+        def zero1(path, leaf):
+            spec = list(self._param_spec(path, leaf))
+            shape = leaf.shape
+            # fsdp rules may already consume the dp axis — an axis can
+            # appear at most once per spec.  NB: PartitionSpec canonicalizes
+            # a 1-tuple ("data",) to the bare string "data".
+            used = {a for s in spec if s is not None
+                    for a in (s if isinstance(s, tuple) else (s,))}
+            dp_free = not any(a in used for a in self.dp)
+            if self.dp and dp_free:
+                order = sorted(range(len(shape)), key=lambda d: -shape[d])
+                for d in order:
+                    if spec[d] is None and shape[d] % self.dp_size == 0 \
+                            and shape[d] >= self.dp_size:
+                        spec[d] = self.dp
+                        break
+            return P(*spec)
+
+        return AdamWState(
+            step=P(),
+            master=jax.tree_util.tree_map_with_path(zero1, opt_state.master),
+            mu=jax.tree_util.tree_map_with_path(zero1, opt_state.mu),
+            nu=jax.tree_util.tree_map_with_path(zero1, opt_state.nu))
+
+    def opt_shardings(self, opt_state):
+        return jax.tree_util.tree_map(self.named, self.opt_pspecs(opt_state))
+
+    # -- batches ---------------------------------------------------------------
+    def batch_pspecs(self, batch_specs: dict):
+        out = {}
+        for k, v in batch_specs.items():
+            if v.shape[0] % max(self.dp_size, 1) == 0:
+                out[k] = P(self.dp, *([None] * (len(v.shape) - 1)))
+            else:
+                out[k] = P(*([None] * len(v.shape)))
+        return out
+
+    def batch_shardings(self, batch_specs: dict):
+        return {k: self.named(v)
+                for k, v in self.batch_pspecs(batch_specs).items()}
+
+    # -- serving caches ----------------------------------------------------------
+    def cache_pspecs(self, cache):
+        """KV/SSM caches: batch over dp when divisible, else the sequence
+        (capacity) dim over dp (long-context decode, batch=1); kv-head dims
+        over tp when divisible."""
+        def assign(path, leaf):
+            name = _leaf_name(path)
+            shape = leaf.shape
+            if name == "length":
+                return P()
+            spec = [None] * len(shape)
+            # leaves: (L, B, S, H, hd) kv / (L, B, W, C) conv /
+            #         (L, B, H, N, P) state
+            if len(shape) >= 2 and shape[1] % max(self.dp_size, 1) == 0:
+                spec[1] = self.dp
+            elif name in ("k", "v", "cross_k", "cross_v") and len(shape) >= 3 \
+                    and shape[2] % max(self.dp_size, 1) == 0:
+                spec[2] = self.dp            # sequence-sharded cache (dp)
+            if name in ("k", "v", "cross_k", "cross_v") and len(shape) >= 4:
+                if shape[3] % self.tp_size == 0:
+                    spec[3] = self.tp_axis
+                elif spec[2] is None and shape[2] % self.tp_size == 0:
+                    # kv-heads not TP-shardable (GQA/MQA with few heads):
+                    # flash-decode style — shard the cache SEQUENCE over
+                    # "model"; softmax over the sharded axis costs only a
+                    # tiny (B, H) all-reduce, while replication would not
+                    # even fit HBM (qwen3 decode_32k: 15 GB/chip, §Perf)
+                    spec[2] = self.tp_axis
+            if name in ("conv", "state") and len(shape) >= 3:
+                d = len(shape) - (2 if name == "state" else 1)
+                if spec.count(self.tp_axis) == 0 and \
+                        shape[d] % self.tp_size == 0:
+                    spec[d] = self.tp_axis
+            return P(*spec)
+
+        return jax.tree_util.tree_map_with_path(assign, cache)
+
+    def cache_shardings(self, cache):
+        return jax.tree_util.tree_map(self.named, self.cache_pspecs(cache))
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        if isinstance(k, jax.tree_util.DictKey):
+            return str(k.key)
+        if isinstance(k, jax.tree_util.GetAttrKey):
+            return str(k.name)
+    return ""
+
+
+def needs_fsdp(cfg: ModelConfig, tp_size: int,
+               hbm_bytes: int = 16 * 2 ** 30) -> bool:
+    """Params + grads (bf16) + ZeRO'd optimizer must fit; fsdp when the
+    TP-only param shard would exceed ~a quarter of HBM."""
+    shard = cfg.param_count() * 2 / max(tp_size, 1)
+    return shard > hbm_bytes // 4

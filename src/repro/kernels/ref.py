@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The acoustic oracle is exactly the Listing-1 reference driver from
+`repro.core.propagators.acoustic` — naive full-grid timestepping with
+grid-aligned injection and receiver interpolation.  The kernels must match
+it to float32 tolerance for every (shape, order, T, tile) combination.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import sources as src_mod
+from repro.core.grid import Grid
+from repro.core.propagators import acoustic
+
+
+def acoustic_reference(nt: int, u0: jnp.ndarray, u1: jnp.ndarray,
+                       m: jnp.ndarray, damp: jnp.ndarray, dt: float,
+                       spacing: Tuple[float, ...], order: int,
+                       g: Optional[src_mod.GriddedSources] = None,
+                       receivers: Optional[src_mod.GriddedReceivers] = None):
+    """Run nt acoustic steps from state (u_prev=u0, u=u1).
+
+    Returns ((u_prev, u) after nt steps, rec (nt, nrec) or None).
+    """
+    grid = Grid(shape=u1.shape, spacing=spacing)
+    params = acoustic.AcousticParams(m=m, damp=damp)
+    state = acoustic.AcousticState(u=u1, u_prev=u0)
+    final, recs = acoustic.propagate(nt, state, params, g, dt, grid, order,
+                                     receivers=receivers)
+    return (final.u_prev, final.u), recs
+
+
+def ssd_chunked_reference(x, a, b, c, chunk: int = None):
+    """Oracle for the Mamba2 SSD scan kernel: the naive sequential linear
+    recurrence h[t] = a[t] * h[t-1] + b[t] * x[t]; y[t] = <c[t], h[t]>.
+
+    Shapes: x (T, P), a (T,), b (T, N), c (T, N); h (N, P); y (T, P).
+    """
+    import jax
+
+    T, P = x.shape
+    N = b.shape[1]
+
+    def step(h, inp):
+        xt, at, bt, ct = inp
+        h = at * h + bt[:, None] * xt[None, :]
+        return h, ct @ h
+
+    h0 = jnp.zeros((N, P), x.dtype)
+    _, y = jax.lax.scan(step, h0, (x, a, b, c))
+    return y

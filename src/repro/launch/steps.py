@@ -1,0 +1,105 @@
+"""train_step / serve_step builders — the functions the dry-run lowers and
+the launchers run.
+
+`make_train_step(cfg, opt_cfg, rules)` returns a pure
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+`make_prefill_step` / `make_decode_step` return the serving-side pure fns.
+All sharding decisions come from `rules` (None = single device).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import ShardingRules
+from repro.models import api
+from repro.models import layers as L
+from repro.optim import AdamWConfig, adamw_update
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+def _constrain_fn(rules: Optional[ShardingRules]) -> L.Constrain:
+    if rules is None:
+        return L._id_constrain
+    return rules.constrain
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    rules: Optional[ShardingRules] = None,
+                    fused_loss: bool = True):
+    """fused_loss=True computes CE chunk-by-chunk over the sequence so the
+    (B, S, V) f32 logits are never materialized (§Perf optimization; set
+    False to reproduce the baseline)."""
+    constrain = _constrain_fn(rules)
+
+    def train_step(params, opt_state, batch):
+        labels, mask = api.loss_targets(cfg, batch)
+
+        def loss_fn(p):
+            if fused_loss:
+                feats, aux = api.forward_features(p, cfg, batch,
+                                                  constrain=constrain)
+                ce = api.chunked_cross_entropy(p, cfg, feats, labels, mask,
+                                               constrain=constrain)
+            else:
+                logits, aux = api.forward(p, cfg, batch,
+                                          constrain=constrain)
+                ce = api.cross_entropy(logits, labels, mask)
+            return ce + AUX_LOSS_WEIGHT * aux, (ce, aux)
+
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_params, new_opt, om = adamw_update(
+            grads, opt_state, opt_cfg,
+            param_dtype=jnp.dtype(cfg.param_dtype))
+        metrics = {"loss": loss, "ce": ce, "aux": aux, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
+    constrain = _constrain_fn(rules)
+
+    def eval_step(params, batch):
+        labels, mask = api.loss_targets(cfg, batch)
+        logits, _ = api.forward(params, cfg, batch, constrain=constrain)
+        return api.cross_entropy(logits, labels, mask)
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      rules: Optional[ShardingRules] = None):
+    constrain = _constrain_fn(rules)
+
+    def prefill_step(params, batch):
+        logits, cache = api.prefill(params, cfg, batch, max_len,
+                                    constrain=constrain)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig,
+                     rules: Optional[ShardingRules] = None):
+    constrain = _constrain_fn(rules)
+
+    def decode_step(params, tokens, cache):
+        logits, cache = api.decode_step(params, cfg, tokens, cache,
+                                        constrain=constrain)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return decode_step
+
+
+def serve_step(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
+    """Alias used by the dry-run for decode-kind shapes: one new token
+    against a pre-populated cache."""
+    return make_decode_step(cfg, rules)

@@ -1,0 +1,162 @@
+"""Fault-tolerant training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+        --steps 200 --ckpt-dir /tmp/ckpt --save-every 50
+
+Production posture (DESIGN.md §4):
+  * **checkpoint/restart**: atomic commits every --save-every steps (async
+    writer thread); on start, auto-resume from the newest valid checkpoint
+    — a preempted/crashed job relaunches with the same command line.
+  * **elastic restart**: the data pipeline addresses rows globally and the
+    checkpoint stores content globally, so resuming on a different mesh
+    (e.g. DP 16 -> 12 after losing hosts) replays the exact stream;
+    `--mesh host` re-fits whatever devices exist.
+  * **straggler mitigation**: per-step wall-time EWMA + deadline factor; a
+    step exceeding --deadline-factor x EWMA raises the incident count, and
+    --max-incidents triggers checkpoint-and-exit(75) so the scheduler can
+    reshape the job (on a real cluster the orchestrator relaunches minus
+    the slow host; in-process we cannot evict a TPU core).
+  * metrics stream to <ckpt-dir>/metrics.jsonl (one JSON per step).
+"""
+import argparse
+import json
+import os
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--stop-after", type=int, default=None,
+                    help="checkpoint and exit after this step (simulated "
+                         "preemption; schedule horizon stays --steps)")
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--mesh", choices=["host", "single"], default="host")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--deadline-factor", type=float, default=3.0)
+    ap.add_argument("--max-incidents", type=int, default=5)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    # multi-host initialization (run_pod.sh sets these; no-op single host)
+    if os.environ.get("JAX_COORDINATOR_ADDRESS"):
+        jax.distributed.initialize(
+            coordinator_address=os.environ["JAX_COORDINATOR_ADDRESS"],
+            num_processes=int(os.environ.get("JAX_NUM_PROCESSES", "1")),
+            process_id=int(os.environ.get("JAX_PROCESS_ID", "0")))
+
+    from repro import configs
+    from repro.checkpoint import CheckpointManager
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import make_batch
+    from repro.distributed.sharding import ShardingRules
+    from repro.launch import mesh as mesh_lib
+    from repro.launch.steps import make_train_step
+    from repro.models import api
+    from repro.optim import AdamWConfig, adamw_init
+
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get(args.arch))
+    shape = ShapeConfig("train_cli", args.seq_len, args.batch, "train")
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                          total_steps=args.steps)
+
+    if args.mesh == "host" and len(jax.devices()) > 1:
+        mesh = mesh_lib.make_host_mesh(model=args.model_axis)
+        rules = ShardingRules(mesh=mesh, cfg=cfg)
+    else:
+        mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
+        rules = None
+
+    params = api.init(jax.random.PRNGKey(0), cfg, shape)
+    opt_state = adamw_init(params)
+    start_step = 0
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep=args.keep)
+        latest = mgr.latest_step()
+        if latest is not None:
+            _, restored = mgr.restore({"params": params, "opt": opt_state})
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = latest
+            print(f"resumed from checkpoint step {latest}", flush=True)
+
+    step_fn = make_train_step(cfg, opt_cfg, rules)
+    if rules is not None:
+        p_sh = rules.param_shardings(params)
+        o_sh = rules.opt_shardings(opt_state)
+        step_fn = jax.jit(step_fn, in_shardings=(p_sh, o_sh, None),
+                          out_shardings=(p_sh, o_sh, None))
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+    else:
+        step_fn = jax.jit(step_fn)
+
+    metrics_path = (os.path.join(args.ckpt_dir, "metrics.jsonl")
+                    if args.ckpt_dir else None)
+    mfile = open(metrics_path, "a") if metrics_path else None
+
+    dp = rules.dp_size if rules is not None else 1
+    ewma, incidents = None, 0
+    stop_at = min(args.steps, args.stop_after or args.steps)
+    for step in range(start_step, stop_at):
+        t0 = time.time()
+        batch = make_batch(cfg, shape, step=step, dp_rank=0, dp_size=1)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt_step = time.time() - t0
+
+        # ---- straggler detection -------------------------------------------
+        if ewma is None:
+            ewma = dt_step
+        else:
+            if dt_step > args.deadline_factor * ewma and step > start_step + 3:
+                incidents += 1
+                print(f"[straggler] step {step} took {dt_step:.2f}s "
+                      f"(ewma {ewma:.2f}s), incident {incidents}", flush=True)
+                if mgr and incidents >= args.max_incidents:
+                    mgr.save(step + 1, {"params": params, "opt": opt_state},
+                             blocking=True)
+                    print("[straggler] checkpoint-and-exit for resharding",
+                          flush=True)
+                    return 75
+            ewma = 0.9 * ewma + 0.1 * dt_step
+
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step} loss {loss:.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"{dt_step*1e3:.0f}ms dp={dp}", flush=True)
+        if mfile:
+            mfile.write(json.dumps({"step": step, "loss": loss,
+                                    "t": dt_step}) + "\n")
+            mfile.flush()
+        if mgr and (step + 1) % args.save_every == 0:
+            mgr.save(step + 1, {"params": params, "opt": opt_state},
+                     blocking=False)
+
+    if mgr:
+        mgr.save(stop_at, {"params": params, "opt": opt_state},
+                 blocking=True)
+    if mfile:
+        mfile.close()
+    if stop_at < args.steps:
+        print(f"stopped (simulated preemption) at step {stop_at}",
+              flush=True)
+    else:
+        print("training complete", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,267 @@
+"""Family-dispatched model API.
+
+One uniform surface over the five model families so the training loop,
+serving engine, dry-run, and smoke tests never branch on architecture:
+
+    init(rng, cfg, shape)                 -> params
+    forward(params, cfg, batch)           -> (logits, aux_loss)
+    loss_targets(cfg, batch)              -> (labels, loss_mask)
+    prefill(params, cfg, batch, max_len)  -> (logits, cache)
+    decode_step(params, cfg, tokens, cache) -> (logits, cache)
+    make_cache(cfg, batch_size, max_len)  -> cache
+    input_specs(cfg, shape)               -> dict[str, ShapeDtypeStruct]
+    param_specs(cfg, shape)               -> pytree of ShapeDtypeStruct
+
+Batch layouts per family (DESIGN.md §5 conventions):
+  dense/moe/ssm/hybrid: tokens (B, S), labels (B, S)
+  vlm:    tokens (B, S - n_img), image_embeds (B, n_img, D), labels (B, S)
+  encdec: frame_embeds (B, S, D), tokens (B, S/4), labels (B, S/4)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import layers as L
+from repro.models import llava, mamba2, transformer, whisper, zamba2
+
+
+def _module(cfg: ModelConfig):
+    return {
+        "dense": transformer, "moe": transformer, "ssm": mamba2,
+        "hybrid": zamba2, "encdec": whisper, "vlm": llava,
+    }[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init(rng, cfg: ModelConfig, shape: Optional[ShapeConfig] = None):
+    if cfg.family == "encdec":
+        seq = shape.seq_len if shape is not None else cfg.max_source_positions
+        return whisper.init(rng, cfg, max_enc=max(seq, 16),
+                            max_dec=max(whisper.dec_seq_len(seq), 16))
+    return _module(cfg).init(rng, cfg)
+
+
+def param_specs(cfg: ModelConfig, shape: Optional[ShapeConfig] = None):
+    """Parameter ShapeDtypeStructs without allocating (for the dry-run)."""
+    return jax.eval_shape(
+        lambda r: init(r, cfg, shape), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, batch: dict,
+            constrain: L.Constrain = L._id_constrain):
+    if cfg.family in ("dense", "moe"):
+        return transformer.forward(params, cfg, batch["tokens"],
+                                   constrain=constrain)
+    if cfg.family == "ssm":
+        return mamba2.forward(params, cfg, batch["tokens"],
+                              constrain=constrain)
+    if cfg.family == "hybrid":
+        return zamba2.forward(params, cfg, batch["tokens"],
+                              constrain=constrain)
+    if cfg.family == "vlm":
+        return llava.forward(params, cfg, batch["tokens"],
+                             batch["image_embeds"], constrain=constrain)
+    if cfg.family == "encdec":
+        return whisper.forward(params, cfg, batch["frame_embeds"],
+                               batch["tokens"], constrain=constrain)
+    raise ValueError(cfg.family)
+
+
+def loss_targets(cfg: ModelConfig, batch: dict):
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        mask = llava.text_loss_mask(cfg, labels.shape[0], labels.shape[1])
+    else:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    return labels, mask
+
+
+def cross_entropy(logits, labels, mask):
+    """Next-token CE over (B, S, V) f32 logits; labels are already aligned
+    (labels[t] is the target for position t)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def forward_features(params, cfg: ModelConfig, batch: dict,
+                     constrain: L.Constrain = L._id_constrain):
+    """Forward up to (but not including) the unembedding: (B, S, D)
+    features + aux loss.  Pairs with `chunked_cross_entropy`."""
+    if cfg.family in ("dense", "moe"):
+        return transformer.forward(params, cfg, batch["tokens"],
+                                   constrain=constrain, features_only=True)
+    if cfg.family == "ssm":
+        return mamba2.forward(params, cfg, batch["tokens"],
+                              constrain=constrain, features_only=True)
+    if cfg.family == "hybrid":
+        return zamba2.forward(params, cfg, batch["tokens"],
+                              constrain=constrain, features_only=True)
+    if cfg.family == "vlm":
+        return llava.forward(params, cfg, batch["tokens"],
+                             batch["image_embeds"], constrain=constrain,
+                             features_only=True)
+    if cfg.family == "encdec":
+        return whisper.forward(params, cfg, batch["frame_embeds"],
+                               batch["tokens"], constrain=constrain,
+                               features_only=True)
+    raise ValueError(cfg.family)
+
+
+def _loss_chunk(cfg: ModelConfig, seq_len: int, max_chunk: int = 512) -> int:
+    c = min(seq_len, max_chunk)
+    while seq_len % c:
+        c -= 1
+    return c
+
+
+def chunked_cross_entropy(params, cfg: ModelConfig, feats, labels, mask,
+                          constrain: L.Constrain = L._id_constrain,
+                          max_chunk: int = 512):
+    """Fused CE: unembed + log-softmax + gather per sequence chunk, so the
+    full (B, S, V) f32 logits tensor is never materialized (37 GB for
+    qwen3-1.7b/train_4k — EXPERIMENTS.md §Perf).  jax.checkpoint on the
+    chunk body keeps the backward at one chunk of logits too."""
+    B, S, D = feats.shape
+    c = _loss_chunk(cfg, S, max_chunk)
+    nc = S // c
+    fr = jnp.moveaxis(feats.reshape(B, nc, c, D), 1, 0)
+    lr = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+    mr = jnp.moveaxis(mask.reshape(B, nc, c), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        f, lab, m = inp
+        logits = L.unembed(params["embed"], cfg, f, constrain=constrain)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        return carry - jnp.sum(ll * m), ()
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (fr, lr, mr))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int,
+            constrain: L.Constrain = L._id_constrain,
+            cache_dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe"):
+        return transformer.prefill(params, cfg, batch["tokens"], max_len,
+                                   constrain=constrain,
+                                   cache_dtype=cache_dtype)
+    if cfg.family == "ssm":
+        return mamba2.prefill(params, cfg, batch["tokens"],
+                              constrain=constrain, cache_dtype=cache_dtype)
+    if cfg.family == "hybrid":
+        return zamba2.prefill(params, cfg, batch["tokens"], max_len,
+                              constrain=constrain, cache_dtype=cache_dtype)
+    if cfg.family == "vlm":
+        return llava.prefill(params, cfg, batch["tokens"],
+                             batch["image_embeds"], max_len,
+                             constrain=constrain, cache_dtype=cache_dtype)
+    if cfg.family == "encdec":
+        return whisper.prefill(params, cfg, batch["frame_embeds"],
+                               batch["tokens"], max_len,
+                               constrain=constrain, cache_dtype=cache_dtype)
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache,
+                constrain: L.Constrain = L._id_constrain):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.decode_step(params, cfg, tokens, cache,
+                                       constrain=constrain)
+    if cfg.family == "ssm":
+        return mamba2.decode_step(params, cfg, tokens, cache,
+                                  constrain=constrain)
+    if cfg.family == "hybrid":
+        return zamba2.decode_step(params, cfg, tokens, cache,
+                                  constrain=constrain)
+    if cfg.family == "encdec":
+        return whisper.decode_step(params, cfg, tokens, cache,
+                                   constrain=constrain)
+    raise ValueError(cfg.family)
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: Optional[int] = None, dtype=jnp.bfloat16):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return transformer.KVCache.zeros(cfg, batch, max_len, dtype)
+    if cfg.family == "ssm":
+        return mamba2.SSMCache.zeros(cfg, batch, dtype)
+    if cfg.family == "hybrid":
+        return zamba2.HybridCache.zeros(cfg, batch, max_len, dtype)
+    if cfg.family == "encdec":
+        return whisper.EncDecCache.zeros(cfg, batch, max_len,
+                                         enc_len or max_len, dtype)
+    raise ValueError(cfg.family)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                enc_len: Optional[int] = None, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(make_cache, cfg, batch, max_len, enc_len, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs, no allocation — the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.activation_dtype)
+    D = cfg.d_model
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            n_img = cfg.num_image_tokens
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - n_img), i32),
+                "image_embeds": jax.ShapeDtypeStruct((B, n_img, D), act),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        if cfg.family == "encdec":
+            Sd = whisper.dec_seq_len(S)
+            return {
+                "frame_embeds": jax.ShapeDtypeStruct((B, S, D), act),
+                "tokens": jax.ShapeDtypeStruct((B, Sd), i32),
+                "labels": jax.ShapeDtypeStruct((B, Sd), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+
+    if shape.kind == "prefill":
+        if cfg.family == "vlm":
+            n_img = cfg.num_image_tokens
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - n_img), i32),
+                "image_embeds": jax.ShapeDtypeStruct((B, n_img, D), act),
+            }
+        if cfg.family == "encdec":
+            Sd = whisper.dec_seq_len(S)
+            return {
+                "frame_embeds": jax.ShapeDtypeStruct((B, S, D), act),
+                "tokens": jax.ShapeDtypeStruct((B, Sd), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+
+    # decode: one new token against a cache of capacity S
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}

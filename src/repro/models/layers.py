@@ -1,0 +1,323 @@
+"""Transformer building blocks — pure functions over plain-pytree params.
+
+No flax: every module is an `init_*(rng, ...) -> dict` plus a pure apply
+function.  All matmul-bearing ops accept an optional sharding-constraint
+callback so the distribution layer can pin activation layouts without the
+model code knowing about meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Constrain = Callable[[jnp.ndarray, str], jnp.ndarray]
+_id_constrain: Constrain = lambda x, name: x  # noqa: E731
+
+
+def maybe_remat(fn, cfg: ModelConfig):
+    """Wrap a layer-scan body with the configured activation-checkpoint
+    policy (hillclimb lever: trades HBM for recompute FLOPs)."""
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def act_dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.activation_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def _normal(rng, shape, dtype, stddev):
+    return (jax.random.normal(rng, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def dense_init(rng, in_dim: int, out_dim, dtype, scale: float = 1.0):
+    shape = (in_dim,) + (tuple(out_dim) if isinstance(out_dim, (tuple, list))
+                         else (out_dim,))
+    stddev = scale / np.sqrt(in_dim)
+    return _normal(rng, shape, dtype, stddev)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Apply RoPE.  x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm / qkv-bias, full or cached)
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig) -> dict:
+    D, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd()
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": dense_init(ks[0], D, (H, hd), dt),
+        "wk": dense_init(ks[1], D, (Hkv, hd), dt),
+        "wv": dense_init(ks[2], D, (Hkv, hd), dt),
+        "wo": _normal(ks[3], (H, hd, D), dt, 1.0 / np.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((Hkv, hd), dt)
+        p["bv"] = jnp.zeros((Hkv, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa(q, k, v, *, causal: bool, q_positions=None, kv_len=None):
+    """Scaled dot-product attention with GQA.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, Hkv, hd).
+    causal: mask col > row (rows offset by `q_positions` when given).
+    kv_len: (B,) valid prefix length of k/v (decode against a padded cache).
+    Softmax in f32.
+
+    When `runtime.ATTN_Q_CHUNK` is set and Sq exceeds it, queries are
+    processed in chunks (lax.scan) so the score tensor is
+    (B, H, chunk, Skv) instead of (B, H, Sq, Skv) — the memory-bounded
+    schedule long-context prefill needs (identical math; see
+    test_attention.py::test_chunked_equals_full).
+    """
+    from repro.models import runtime
+
+    B, Sq, H, hd = q.shape
+    qc = runtime.ATTN_Q_CHUNK
+    if qc and Sq > qc and Sq % qc == 0 and not runtime.SCAN_UNROLL:
+        if q_positions is None:
+            q_positions = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+        qr = q.reshape(B, Sq // qc, qc, H, hd)
+        pr = q_positions.reshape(B, Sq // qc, qc)
+
+        def body(_, inp):
+            qch, pch = inp                    # (B, qc, H, hd), (B, qc)
+            o = _sdpa_full(qch, k, v, causal=causal, q_positions=pch,
+                           kv_len=kv_len)
+            return (), o
+
+        _, outs = jax.lax.scan(body, (), (jnp.moveaxis(qr, 1, 0),
+                                          jnp.moveaxis(pr, 1, 0)))
+        return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+    return _sdpa_full(q, k, v, causal=causal, q_positions=q_positions,
+                      kv_len=kv_len)
+
+
+def _sdpa_full(q, k, v, *, causal: bool, q_positions=None, kv_len=None):
+    B, Sq, H, hd = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    qr = q.reshape(B, Sq, Hkv, rep, hd)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qr, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    cols = jnp.arange(Skv)
+    neg = jnp.float32(-1e30)
+    if causal:
+        rows = (q_positions if q_positions is not None
+                else jnp.broadcast_to(jnp.arange(Sq), (B, Sq)))
+        mask = cols[None, None, :] <= rows[:, :, None]       # (B, Sq, Skv)
+        scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    if kv_len is not None:
+        lmask = cols[None, :] < kv_len[:, None]              # (B, Skv)
+        scores = jnp.where(lmask[:, None, None, None, :], scores, neg)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_block(p, cfg: ModelConfig, x, positions, *, causal=True,
+                    constrain: Constrain = _id_constrain):
+    """Full (train/prefill) self-attention.  Returns (out, (k, v))."""
+    q, k, v = _qkv(p, cfg, x, positions)
+    q = constrain(q, "act_heads")
+    k = constrain(k, "act_kv_heads")
+    v = constrain(v, "act_kv_heads")
+    o = sdpa(q, k, v, causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(out, "act_model"), (k, v)
+
+
+def attention_decode(p, cfg: ModelConfig, x, k_cache, v_cache, pos,
+                     constrain: Constrain = _id_constrain):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); k_cache/v_cache: (B, Smax, Hkv, hd); pos: (B,) current
+    lengths.  Returns (out, k_cache', v_cache').
+
+    The cache update is a one-hot masked select rather than a scatter:
+    elementwise ops keep GSPMD sharding intact, where a (bidx, pos) scatter
+    makes it all-gather the whole cache every step (60 GB/step for
+    qwen3-1.7b/decode_32k — EXPERIMENTS.md §Perf).
+    """
+    B, Smax = k_cache.shape[0], k_cache.shape[1]
+    positions = pos[:, None]                                  # (B, 1)
+    q, k, v = _qkv(p, cfg, x, positions)
+    onehot = (jnp.arange(Smax)[None, :] == pos[:, None])      # (B, Smax)
+    sel = onehot[:, :, None, None]
+    k_cache = jnp.where(sel, k[:, 0][:, None].astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(sel, v[:, 0][:, None].astype(v_cache.dtype), v_cache)
+    o = sdpa(q, k_cache.astype(q.dtype), v_cache.astype(q.dtype),
+             causal=False, kv_len=pos + 1)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(out, "act_model"), k_cache, v_cache
+
+
+def cross_attention_block(p, cfg: ModelConfig, x, enc_kv,
+                          constrain: Constrain = _id_constrain):
+    """Cross-attention (whisper decoder).  enc_kv = (k, v) precomputed from
+    the encoder output."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    k, v = enc_kv
+    o = sdpa(q, k, v, causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return constrain(out, "act_model")
+
+
+def encoder_kv(p, cfg: ModelConfig, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(ks[0], D, F, dt),
+        "w_up": dense_init(ks[1], D, F, dt),
+        "w_down": dense_init(ks[2], F, D, dt),
+    }
+
+
+def mlp_block(p, x, constrain: Constrain = _id_constrain):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = constrain(jax.nn.silu(g) * u, "act_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return constrain(out, "act_model")
+
+
+def init_mlp_gelu(rng, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    """Classic 2-matrix GELU MLP with biases (whisper-style)."""
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 2)
+    return {
+        "w_in": dense_init(ks[0], D, F, dt),
+        "b_in": jnp.zeros((F,), dt),
+        "w_out": dense_init(ks[1], F, D, dt),
+        "b_out": jnp.zeros((D,), dt),
+    }
+
+
+def mlp_gelu_block(p, x, constrain: Constrain = _id_constrain):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"]) + p["b_in"]
+    h = constrain(jax.nn.gelu(h), "act_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_out"]) + p["b_out"]
+    return constrain(out, "act_model")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embed(rng, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 2)
+    p = {"embedding": _normal(ks[0], (cfg.vocab_size, cfg.d_model), dt,
+                              0.02)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_size, dt)
+    return p
+
+
+def embed(p, cfg: ModelConfig, tokens):
+    return p["embedding"][tokens].astype(act_dtype_of(cfg))
+
+
+def unembed(p, cfg: ModelConfig, x, constrain: Constrain = _id_constrain):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, p["embedding"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, p["lm_head"])
+    return constrain(logits.astype(jnp.float32), "act_vocab")

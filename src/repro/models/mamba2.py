@@ -1,0 +1,341 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunked-scan implementation.
+
+The SSD chunked algorithm *is* temporal blocking of a linear recurrence
+(DESIGN.md §5): a chunk of Q timesteps is advanced while resident in fast
+memory (intra-chunk attention-like term), and only the per-chunk state — the
+"wavefront" — crosses chunk boundaries (inter-chunk scan).  The Pallas
+kernel in `repro.kernels.ssd_scan` exploits exactly that; this module is the
+pure-XLA reference used for training/dry-run.
+
+Recurrence (per head h, state N x P):
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t (x)_t^T
+    y_t = C_t . h_t + D x_t
+
+Chunked evaluation with inclusive in-chunk log-decay L_i = sum_{k<=i} dt_k A:
+    Y[i] = C_i exp(L_i) h_chunk_start
+         + sum_{j<=i} (C_i . B_j) exp(L_i - L_j) dt_j x_j          (intra)
+    h_end = exp(L_Q) h_start + sum_j exp(L_Q - L_j) dt_j B_j x_j^T (state)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import runtime
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_ch = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, nheads, conv_ch
+
+
+def init_block(rng, cfg: ModelConfig) -> dict:
+    """Projections are SPLIT per tensor (z / x / BC / dt; conv likewise)
+    rather than fused: a fused in_proj TP-shards its output dim and the
+    split boundaries fall mid-shard, forcing a collective-permute per
+    slice (EXPERIMENTS.md §Perf, mamba2 cell).  Split params give each
+    output a clean Megatron column sharding; out_proj is the row-parallel
+    partner."""
+    D = cfg.d_model
+    d_inner, H, conv_ch = dims(cfg)
+    G, N, W = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_conv_width
+    dt = L.dtype_of(cfg)
+    ks = jax.random.split(rng, 7)
+    return {
+        "norm": jnp.ones((D,), dt),
+        "in_z": L.dense_init(ks[0], D, d_inner, dt),
+        "in_x": L.dense_init(ks[1], D, d_inner, dt),
+        "in_bc": L.dense_init(ks[2], D, 2 * G * N, dt),
+        "in_dt": L.dense_init(ks[3], D, H, dt),
+        "conv_x_w": (jax.random.normal(ks[4], (W, d_inner), jnp.float32)
+                     / np.sqrt(W)).astype(dt),
+        "conv_x_b": jnp.zeros((d_inner,), dt),
+        "conv_bc_w": (jax.random.normal(ks[5], (W, 2 * G * N), jnp.float32)
+                      / np.sqrt(W)).astype(dt),
+        "conv_bc_b": jnp.zeros((2 * G * N,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((d_inner,), dt),
+        "out_proj": L.dense_init(ks[6], d_inner, D, dt),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 init_state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along S.  xbc: (B, S, C); w: (W, C).
+
+    init_state: (B, W-1, C) left context (decode/continuation); defaults to
+    zeros.  Returns (out (B, S, C), new_state (B, W-1, C))."""
+    B, S, C = xbc.shape
+    W = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((B, W - 1, C), xbc.dtype)
+    full = jnp.concatenate([init_state, xbc], axis=1)     # (B, S+W-1, C)
+    out = jnp.zeros((B, S, C), jnp.float32)
+    for k in range(W):
+        out = out + full[:, k:k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = full[:, S:]                                # last W-1 inputs
+    return jax.nn.silu(out).astype(xbc.dtype), new_state
+
+
+def _split_proj(p, cfg: ModelConfig, x):
+    """Separate column-parallel projections (no mid-shard slicing)."""
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"])
+    xi = jnp.einsum("bsd,de->bse", x, p["in_x"])
+    bc = jnp.einsum("bsd,de->bse", x, p["in_bc"])
+    dt_raw = jnp.einsum("bsd,de->bse", x, p["in_dt"])
+    return z, xi, bc, dt_raw
+
+
+def _ssd_chunked(xh, dtv, Bm, Cm, A, chunk: int,
+                 h0: Optional[jnp.ndarray] = None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); dtv: (B, S, H) (post-softplus); Bm/Cm: (B, S, G, N);
+    A: (H,) negative.  Returns (y (B, S, H, P), h_final (B, H, N, P)).
+    S must be a multiple of `chunk` (caller pads).
+    """
+    Bsz, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = S // chunk
+    Q = chunk
+
+    xr = xh.reshape(Bsz, nc, Q, H, P)
+    dtr = dtv.reshape(Bsz, nc, Q, H)
+    Br = Bm.reshape(Bsz, nc, Q, G, N)
+    Cr = Cm.reshape(Bsz, nc, Q, G, N)
+
+    l = dtr * A                                           # (B, nc, Q, H) <= 0
+    Lc = jnp.cumsum(l, axis=2)                            # inclusive
+    LQ = Lc[:, :, -1]                                     # (B, nc, H)
+
+    # intra-chunk "attention" term
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cr, Br)         # (B, nc, G, Q, Q)
+    Ldiff = Lc[:, :, :, None, :] - Lc[:, :, None, :, :]   # (B, nc, Q, K, H)
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(Ldiff), 0.0)
+    CBh = jnp.repeat(CB, rep, axis=2) if rep > 1 else CB  # (B, nc, H, Q, Q)
+    dtk = jnp.transpose(dtr, (0, 1, 3, 2))[:, :, :, None, :]  # dt_j on k axis
+    M = CBh * jnp.transpose(decay, (0, 1, 4, 2, 3)) * dtk
+    # the (B, nc, H, Q, Q) score matrix dominates HBM traffic; carry it
+    # (and the matmul) in the input dtype (bf16 in production), accumulate
+    # f32 - the same mixed precision attention uses (EXPERIMENTS.md §Perf).
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M.astype(xh.dtype),
+                         xr.astype(xh.dtype),
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: S_c = sum_j exp(LQ - L_j) dt_j B_j x_j^T
+    sdecay = jnp.exp(LQ[:, :, None, :] - Lc) * dtr        # (B, nc, Q, H)
+    Brep = jnp.repeat(Br, rep, axis=3) if rep > 1 else Br
+    S_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", sdecay, Brep, xr)
+
+    # inter-chunk scan
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def scan_body(h, inp):
+        s_c, lq = inp                                     # (B,H,N,P), (B,H)
+        y_state_h = h                                     # state BEFORE chunk
+        h_next = jnp.exp(lq)[:, :, None, None] * h + s_c
+        return h_next, y_state_h
+
+    S_cs = jnp.moveaxis(S_c, 1, 0)                        # (nc, B, H, N, P)
+    LQs = jnp.moveaxis(LQ, 1, 0)                          # (nc, B, H)
+    h_final, h_starts = jax.lax.scan(scan_body, h0.astype(jnp.float32),
+                                     (S_cs.astype(jnp.float32), LQs))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)               # (B, nc, H, N, P)
+
+    # inter-chunk contribution: C_i exp(L_i) h_start
+    Crep = jnp.repeat(Cr, rep, axis=3) if rep > 1 else Cr
+    y_inter = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp", Crep.astype(jnp.float32),
+                         jnp.exp(Lc), h_starts)
+    y = (y_intra.astype(jnp.float32) + y_inter).reshape(Bsz, S, H, P)
+    return y, h_final
+
+
+def block_forward(p, cfg: ModelConfig, x,
+                  conv_state: Optional[jnp.ndarray] = None,
+                  ssm_state: Optional[jnp.ndarray] = None,
+                  constrain: L.Constrain = L._id_constrain):
+    """One Mamba2 block (pre-norm residual).  x: (B, S, D).
+
+    Returns (y, (new_conv_state, new_ssm_state)) so prefill can seed decode.
+    """
+    d_inner, H, conv_ch = dims(cfg)
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    Bsz, S, D = x.shape
+
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    z, xi, bc, dt_raw = _split_proj(p, cfg, h)
+    conv_x_st = conv_bc_st = None
+    if conv_state is not None:
+        conv_x_st = conv_state[..., :d_inner]
+        conv_bc_st = conv_state[..., d_inner:]
+    xi, new_conv_x = _causal_conv(xi, p["conv_x_w"], p["conv_x_b"],
+                                  conv_x_st)
+    bc, new_conv_bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"],
+                                   conv_bc_st)
+    new_conv = jnp.concatenate([new_conv_x, new_conv_bc], axis=-1)
+    Bm = bc[..., :G * N].reshape(Bsz, S, G, N)
+    Cm = bc[..., G * N:].reshape(Bsz, S, G, N)
+
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(Bsz, S, H, P)
+
+    # pad S to a chunk multiple (padded tokens have dt=0 -> identity decay,
+    # zero input; they do not disturb the state)
+    Q = cfg.ssm_chunk
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    y, h_final = _ssd_chunked(xh, dtv, Bm, Cm, A, Q, h0=ssm_state)
+    y = y[:, :S]
+    y = y + p["D"][None, None, :, None] * xh[:, :S].astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + constrain(out, "act_model"), (new_conv, h_final)
+
+
+def block_decode(p, cfg: ModelConfig, x, conv_state, ssm_state,
+                 constrain: L.Constrain = L._id_constrain):
+    """One-token recurrent update.  x: (B, 1, D); conv_state (B, W-1, C);
+    ssm_state (B, H, N, P) f32."""
+    d_inner, H, conv_ch = dims(cfg)
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_headdim
+    Bsz = x.shape[0]
+
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    z, xi_t, bc_t, dt_raw = _split_proj(p, cfg, h)        # (B, 1, *)
+
+    def one_step_conv(state, new_col, w, b):
+        window = jnp.concatenate([state, new_col[:, None]], axis=1)
+        out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                         w.astype(jnp.float32)) + b.astype(jnp.float32)
+        return jax.nn.silu(out), window[:, 1:]
+
+    conv_x_st = conv_state[..., :d_inner]
+    conv_bc_st = conv_state[..., d_inner:]
+    xi, new_conv_x = one_step_conv(conv_x_st, xi_t[:, 0],
+                                   p["conv_x_w"], p["conv_x_b"])
+    bc, new_conv_bc = one_step_conv(conv_bc_st, bc_t[:, 0],
+                                    p["conv_bc_w"], p["conv_bc_b"])
+    new_conv = jnp.concatenate([new_conv_x, new_conv_bc], axis=-1)
+    Bm = bc[:, :G * N].reshape(Bsz, G, N)
+    Cm = bc[:, G * N:].reshape(Bsz, G, N)
+    dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(Bsz, H, P)
+    rep = H // G
+    Brep = jnp.repeat(Bm, rep, axis=1) if rep > 1 else Bm  # (B, H, N)
+    Crep = jnp.repeat(Cm, rep, axis=1) if rep > 1 else Cm
+
+    a = jnp.exp(dtv * A)                                   # (B, H)
+    h_new = (a[:, :, None, None] * ssm_state
+             + (dtv[:, :, None] * Brep)[..., None] * xh[:, :, None, :])
+    y = jnp.einsum("bhn,bhnp->bhp", Crep, h_new)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + constrain(out, "act_model"), (new_conv, h_new)
+
+
+class SSMCache(NamedTuple):
+    """Stacked-over-layers recurrent cache for decode."""
+
+    conv: jnp.ndarray    # (L, B, W-1, conv_ch)
+    state: jnp.ndarray   # (L, B, H, N, P) f32
+    length: jnp.ndarray  # (B,)
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+        d_inner, H, conv_ch = dims(cfg)
+        return cls(
+            jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv_width - 1,
+                       conv_ch), dtype),
+            jnp.zeros((cfg.num_layers, batch, H, cfg.ssm_state,
+                       cfg.ssm_headdim), jnp.float32),
+            jnp.zeros((batch,), jnp.int32))
+
+
+def init(rng, cfg: ModelConfig) -> dict:
+    k_emb, k_blocks = jax.random.split(rng)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    return {
+        "embed": L.init_embed(k_emb, cfg),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+    }
+
+
+def forward(params, cfg: ModelConfig, tokens,
+            constrain: L.Constrain = L._id_constrain,
+            features_only: bool = False):
+    x = L.embed(params["embed"], cfg, tokens)
+    x = constrain(x, "act_model")
+
+    def body(carry, bp):
+        y, _ = block_forward(bp, cfg, carry, constrain=constrain)
+        return y, ()
+
+    x, _ = runtime.layer_scan(L.maybe_remat(body, cfg), x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if features_only:
+        return x, 0.0
+    return L.unembed(params["embed"], cfg, x, constrain=constrain), 0.0
+
+
+def prefill(params, cfg: ModelConfig, tokens,
+            constrain: L.Constrain = L._id_constrain, cache_dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], cfg, tokens)
+    x = constrain(x, "act_model")
+    B, S = tokens.shape
+
+    def body(carry, bp):
+        y, (conv, state) = block_forward(bp, cfg, carry, constrain=constrain)
+        return y, (conv.astype(cache_dtype), state)
+
+    x, (convs, states) = runtime.layer_scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x, constrain=constrain)
+    cache = SSMCache(conv=convs, state=states,
+                     length=jnp.full((B,), S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: SSMCache,
+                constrain: L.Constrain = L._id_constrain):
+    x = L.embed(params["embed"], cfg, tokens)
+    x = constrain(x, "act_model")
+
+    def body(carry, scanned):
+        bp, conv, state = scanned
+        y, (new_conv, new_state) = block_decode(
+            bp, cfg, carry, conv.astype(carry.dtype), state,
+            constrain=constrain)
+        return y, (new_conv.astype(conv.dtype), new_state)
+
+    x, (convs, states) = runtime.layer_scan(body, x,
+                                      (params["blocks"], cache.conv,
+                                       cache.state))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x, constrain=constrain)
+    return logits, SSMCache(conv=convs, state=states,
+                            length=cache.length + 1)

@@ -1,0 +1,149 @@
+"""Mixture-of-Experts FFN with token-choice top-k routing.
+
+Sort-based dispatch (not one-hot einsum): tokens are grouped per expert by
+sorting their expert assignments, packed into capacity-bounded per-expert
+batches, run through the expert SwiGLU as batched einsums over the expert
+dim, and combined back with router weights.  Compute is therefore
+proportional to *active* parameters (top-k), as required for honest MoE
+rooflines, and the expert dimension is shardable over the "model" mesh axis
+(expert parallelism; XLA inserts the all-to-alls from the shardings).
+
+Structural note (DESIGN.md §5): sparse expert assignment -> precomputed
+indices -> dense compute is the same "align sparse operators, then run a
+regular schedule" shape as the paper's source precomputation; we note the
+echo, the mechanism is standard GShard/MaxText practice.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Constrain, _id_constrain, dense_init, dtype_of
+
+
+def init_moe(rng, cfg: ModelConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                   / np.sqrt(D)).astype(dt),
+        "w_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                 / np.sqrt(D)).astype(dt),
+        "w_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                   / np.sqrt(F)).astype(dt),
+    }
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(np.ceil(n_tokens * cfg.experts_per_tok * cfg.capacity_factor
+                      / cfg.num_experts))
+    return max(cap, cfg.experts_per_tok)
+
+
+def route(p, cfg: ModelConfig, x2d: jnp.ndarray):
+    """Top-k routing.  x2d: (N, D) -> (expert_idx (N, K), weights (N, K),
+    aux_loss)."""
+    logits = jnp.einsum("nd,de->ne", x2d.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, expert_idx = jax.lax.top_k(probs, cfg.experts_per_tok)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    # load-balancing auxiliary loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], cfg.num_experts), 0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux = cfg.num_experts * jnp.sum(density * density_prob)
+    return expert_idx, weights.astype(x2d.dtype), aux
+
+
+def _dispatch_group(cfg: ModelConfig, x2d, expert_idx, weights, C: int):
+    """Capacity dispatch for one (shard-local) token group.
+
+    x2d: (n, D); expert_idx/weights: (n, K).  Returns (buf (E, C, D),
+    slot_e, slot_c, keep, tok_sorted, w_sorted) — everything downstream
+    needs for combine.  All ops are local to the group, which is the whole
+    point: under vmap with the group dim sharded over DP, GSPMD keeps the
+    sort/scatter on-device instead of all-reducing global (E, C, D) buffers
+    (EXPERIMENTS.md §Perf, qwen3-moe cell).
+    """
+    n, D = x2d.shape
+    K = cfg.experts_per_tok
+    E = cfg.num_experts
+
+    flat_e = expert_idx.reshape(-1)                      # (n*K,)
+    flat_tok = jnp.repeat(jnp.arange(n), K)
+    flat_w = weights.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    rank = jnp.arange(n * K) - start[e_sorted]
+    keep = rank < C
+    slot_e = jnp.where(keep, e_sorted, E - 1)
+    slot_c = jnp.where(keep, rank, C - 1)
+
+    buf = jnp.zeros((E, C, D), x2d.dtype)
+    vals = jnp.where(keep[:, None], x2d[tok_sorted], 0)
+    buf = buf.at[slot_e, slot_c].set(vals)               # dropped slots keep 0
+    return buf, slot_e, slot_c, keep, tok_sorted, flat_w[order]
+
+
+def moe_block(p, cfg: ModelConfig, x: jnp.ndarray,
+              constrain: Constrain = _id_constrain):
+    """x: (B, S, D) -> (B, S, D), plus aux loss.
+
+    Sort-based capacity dispatch, vmapped over `runtime.MOE_DP_GROUPS`
+    token groups (one per DP shard in production):
+      1. per group: flatten (token, choice), sort by expert, rank in
+         expert, scatter into (E, C_loc, D) — all shard-local;
+      2. batched expert SwiGLU over (G, E, C_loc, D) x (E, D, F) — the
+         only cross-shard movement (DP-groups meet model-sharded experts);
+      3. per group: gather back, weight, segment-sum over the K choices.
+    """
+    from repro.models import runtime
+
+    B, S, D = x.shape
+    N = B * S
+    G = runtime.MOE_DP_GROUPS
+    if G <= 1 or N % G or (N // G) < cfg.num_experts:
+        G = 1
+    n_loc = N // G
+    C = _capacity(n_loc, cfg)
+
+    x2d = x.reshape(N, D)
+    expert_idx, weights, aux = route(p, cfg, x2d)
+
+    xg = x2d.reshape(G, n_loc, D)
+    eg = expert_idx.reshape(G, n_loc, cfg.experts_per_tok)
+    wg = weights.reshape(G, n_loc, cfg.experts_per_tok)
+
+    buf, slot_e, slot_c, keep, tok_sorted, w_sorted = jax.vmap(
+        lambda xs, es, ws: _dispatch_group(cfg, xs, es, ws, C))(xg, eg, wg)
+    buf = constrain(buf, "moe_expert_batch_g")           # (G, E, C, D)
+
+    g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    out_buf = constrain(out_buf, "moe_expert_batch_g")
+
+    def _combine(out_b, sl_e, sl_c, kp, toks, ws):
+        expert_out = out_b[sl_e, sl_c]                   # (n*K, D)
+        expert_out = jnp.where(kp[:, None], expert_out, 0)
+        contrib = expert_out * ws[:, None]
+        return jax.ops.segment_sum(contrib, toks, num_segments=n_loc)
+
+    y = jax.vmap(_combine)(out_buf, slot_e, slot_c, keep, tok_sorted,
+                           w_sorted)
+    y = y.reshape(B, S, D).astype(x.dtype)
+    return constrain(y, "act_model"), aux
+
+
+def moe_flops_per_token(cfg: ModelConfig) -> int:
+    """Active FFN FLOPs per token (fwd): 3 matmuls x top-k experts."""
+    return 2 * 3 * cfg.d_model * cfg.moe_d_ff * cfg.experts_per_tok

@@ -1,0 +1,66 @@
+"""Trace-time runtime knobs for the model stack.
+
+`SCAN_UNROLL` switches the *layer* scans to full unrolling.  Production and
+smoke paths keep it False (O(1) HLO size).  The roofline accounting in
+`launch.dryrun` sets it True on reduced-depth configs because XLA's
+cost_analysis counts a while-loop body once — unrolled reduced-depth
+measurements at two depths give exact per-layer costs by linear
+extrapolation (DESIGN.md §3).  Inner (non-layer) scans — e.g. the SSD chunk
+recurrence — stay rolled; their bodies are elementwise-only and contribute
+negligibly to FLOP totals (noted in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+SCAN_UNROLL = False
+
+# Query-chunked attention: 0 = full-S scores; >0 = process queries in chunks
+# of this size when Sq exceeds it (memory-bounded long-context prefill).
+ATTN_Q_CHUNK = 0
+
+# MoE dispatch groups: 1 = single global dispatch; set to the DP degree in
+# production so routing/sort/scatter stay shard-local (EXPERIMENTS.md §Perf).
+MOE_DP_GROUPS = 1
+
+
+@contextlib.contextmanager
+def moe_dp_groups(g: int):
+    global MOE_DP_GROUPS
+    prev = MOE_DP_GROUPS
+    MOE_DP_GROUPS = g
+    try:
+        yield
+    finally:
+        MOE_DP_GROUPS = prev
+
+
+@contextlib.contextmanager
+def attn_q_chunk(size: int):
+    global ATTN_Q_CHUNK
+    prev = ATTN_Q_CHUNK
+    ATTN_Q_CHUNK = size
+    try:
+        yield
+    finally:
+        ATTN_Q_CHUNK = prev
+
+
+def layer_scan(body, init, xs, length=None):
+    """lax.scan for stacking over layers, honouring SCAN_UNROLL."""
+    if SCAN_UNROLL:
+        return jax.lax.scan(body, init, xs, length=length, unroll=True)
+    return jax.lax.scan(body, init, xs, length=length)
+
+
+@contextlib.contextmanager
+def unrolled_scans():
+    global SCAN_UNROLL
+    prev = SCAN_UNROLL
+    SCAN_UNROLL = True
+    try:
+        yield
+    finally:
+        SCAN_UNROLL = prev

@@ -1,0 +1,186 @@
+"""Decoder-only transformer LM (dense and MoE families), scan-over-layers.
+
+Layer parameters are stacked on a leading axis and the block is applied with
+`lax.scan`, so HLO size and compile time are O(1) in depth — a hard
+requirement for dry-running 88-layer models on the CPU backend (DESIGN.md
+§3).  Supports GQA, qk-norm, qkv-bias, tied embeddings, MoE FFN, and an
+`inputs_embeds` path for the VLM/audio stubs.
+
+Three entry points:
+  forward(params, cfg, tokens | embeds)      -> logits           (train)
+  prefill(params, cfg, tokens)               -> logits, KVCache  (serving)
+  decode_step(params, cfg, tokens, KVCache)  -> logits, KVCache  (serving)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import runtime
+from repro.models import moe as moe_mod
+
+
+class KVCache(NamedTuple):
+    """Stacked-over-layers KV cache.  k, v: (L, B, Smax, Hkv, hd);
+    length: (B,) valid prefix."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, batch: int, max_len: int,
+              dtype=jnp.bfloat16):
+        shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.hd())
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def _is_moe(cfg: ModelConfig) -> bool:
+    return cfg.family == "moe" and cfg.num_experts > 0
+
+
+def init_block(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 3)
+    dt = L.dtype_of(cfg)
+    p = {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attention(ks[0], cfg),
+    }
+    if _is_moe(cfg):
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    elif cfg.mlp_type == "gelu":
+        p["mlp"] = L.init_mlp_gelu(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _mlp_apply(cfg: ModelConfig, bp: dict, h, constrain):
+    if cfg.mlp_type == "gelu":
+        return L.mlp_gelu_block(bp["mlp"], h, constrain=constrain)
+    return L.mlp_block(bp["mlp"], h, constrain=constrain)
+
+
+def init(rng, cfg: ModelConfig) -> dict:
+    """Stacked parameters: every leaf of blocks has leading dim num_layers."""
+    k_emb, k_blocks, k_final = jax.random.split(rng, 3)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: init_block(k, cfg))(block_keys)
+    return {
+        "embed": L.init_embed(k_emb, cfg),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+    }
+
+
+def _block_apply(cfg: ModelConfig, bp: dict, x, positions, constrain):
+    h = L.rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+    attn_out, _ = L.attention_block(bp["attn"], cfg, h, positions,
+                                    causal=True, constrain=constrain)
+    x = x + attn_out
+    h = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+    if _is_moe(cfg):
+        mlp_out, aux = moe_mod.moe_block(bp["moe"], cfg, h,
+                                         constrain=constrain)
+    else:
+        mlp_out, aux = _mlp_apply(cfg, bp, h, constrain), 0.0
+    return x + mlp_out, aux
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: Optional[jnp.ndarray],
+            inputs_embeds: Optional[jnp.ndarray] = None,
+            constrain: L.Constrain = L._id_constrain,
+            features_only: bool = False):
+    """Full causal forward.  tokens: (B, S) int32 (or inputs_embeds
+    (B, S, D)).  Returns (logits (B, S, V) f32, aux_loss) — or the final
+    (B, S, D) features when `features_only` (fused-loss path)."""
+    if inputs_embeds is None:
+        x = L.embed(params["embed"], cfg, tokens)
+    else:
+        x = inputs_embeds.astype(L.act_dtype_of(cfg))
+    B, S, _ = x.shape
+    x = constrain(x, "act_model")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(carry, bp):
+        y, aux = _block_apply(cfg, bp, carry, positions, constrain)
+        return y, aux
+
+    x, auxs = runtime.layer_scan(L.maybe_remat(body, cfg), x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if features_only:
+        return x, jnp.sum(auxs)
+    logits = L.unembed(params["embed"], cfg, x, constrain=constrain)
+    return logits, jnp.sum(auxs)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            max_len: int, inputs_embeds: Optional[jnp.ndarray] = None,
+            constrain: L.Constrain = L._id_constrain,
+            cache_dtype=jnp.bfloat16):
+    """Prefill pass: forward + populate a KV cache of capacity max_len."""
+    if inputs_embeds is None:
+        x = L.embed(params["embed"], cfg, tokens)
+    else:
+        x = inputs_embeds.astype(L.act_dtype_of(cfg))
+    B, S, _ = x.shape
+    x = constrain(x, "act_model")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(carry, bp):
+        h = L.rms_norm(carry, bp["attn_norm"], cfg.norm_eps)
+        attn_out, (k, v) = L.attention_block(bp["attn"], cfg, h, positions,
+                                             causal=True,
+                                             constrain=constrain)
+        y = carry + attn_out
+        h2 = L.rms_norm(y, bp["mlp_norm"], cfg.norm_eps)
+        if _is_moe(cfg):
+            mlp_out, _ = moe_mod.moe_block(bp["moe"], cfg, h2,
+                                           constrain=constrain)
+        else:
+            mlp_out = _mlp_apply(cfg, bp, h2, constrain)
+        pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+        return y + mlp_out, (jnp.pad(k.astype(cache_dtype), pad),
+                             jnp.pad(v.astype(cache_dtype), pad))
+
+    x, (ks, vs) = runtime.layer_scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x, constrain=constrain)
+    cache = KVCache(k=ks, v=vs,
+                    length=jnp.full((B,), S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: KVCache,
+                constrain: L.Constrain = L._id_constrain):
+    """One decode step.  tokens: (B, 1).  Returns (logits (B, 1, V),
+    updated cache)."""
+    x = L.embed(params["embed"], cfg, tokens)
+    x = constrain(x, "act_model")
+    pos = cache.length                                     # (B,)
+
+    def body(carry, scanned):
+        bp, k_cache, v_cache = scanned
+        h = L.rms_norm(carry, bp["attn_norm"], cfg.norm_eps)
+        attn_out, k_new, v_new = L.attention_decode(
+            bp["attn"], cfg, h, k_cache, v_cache, pos, constrain=constrain)
+        y = carry + attn_out
+        h2 = L.rms_norm(y, bp["mlp_norm"], cfg.norm_eps)
+        if _is_moe(cfg):
+            mlp_out, _ = moe_mod.moe_block(bp["moe"], cfg, h2,
+                                           constrain=constrain)
+        else:
+            mlp_out = _mlp_apply(cfg, bp, h2, constrain)
+        return y + mlp_out, (k_new, v_new)
+
+    x, (ks, vs) = runtime.layer_scan(body, x, (params["blocks"], cache.k, cache.v))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x, constrain=constrain)
+    return logits, KVCache(k=ks, v=vs, length=cache.length + 1)

@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the brief, the conv frontend is a STUB: `input_specs()` provides
+precomputed frame embeddings (B, S_enc, D) — the two conv layers +
+GELU that produce them are not part of the benchmarked backbone.  The
+backbone is faithful to whisper-medium: pre-LN transformer with LayerNorm
+(+bias), GELU MLPs, MHA (kv == heads), learned positions, 24 encoder +
+24 decoder layers (scan-over-layers each).
+
+Decode uses a self-attention KV cache plus a cross-attention KV computed
+once from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import runtime
+
+
+def dec_seq_len(seq_len: int) -> int:
+    """Shape convention (DESIGN.md §5): decoder length = seq_len // 4."""
+    return max(seq_len // 4, 1)
+
+
+def _init_ln(cfg):
+    dt = L.dtype_of(cfg)
+    return {"w": jnp.ones((cfg.d_model,), dt),
+            "b": jnp.zeros((cfg.d_model,), dt)}
+
+
+def init_enc_block(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 2)
+    return {
+        "attn_norm": _init_ln(cfg),
+        "attn": L.init_attention(ks[0], cfg),
+        "mlp_norm": _init_ln(cfg),
+        "mlp": L.init_mlp_gelu(ks[1], cfg),
+    }
+
+
+def init_dec_block(rng, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(rng, 3)
+    return {
+        "self_norm": _init_ln(cfg),
+        "self_attn": L.init_attention(ks[0], cfg),
+        "cross_norm": _init_ln(cfg),
+        "cross_attn": L.init_attention(ks[1], cfg),
+        "mlp_norm": _init_ln(cfg),
+        "mlp": L.init_mlp_gelu(ks[2], cfg),
+    }
+
+
+def init(rng, cfg: ModelConfig, max_enc: int = 0, max_dec: int = 0) -> dict:
+    dt = L.dtype_of(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    enc_keys = jax.random.split(k1, cfg.num_layers)
+    dec_keys = jax.random.split(k2, cfg.num_decoder_layers)
+    max_enc = max_enc or cfg.max_source_positions
+    return {
+        "embed": L.init_embed(k3, cfg),
+        "enc_pos": (0.02 * jax.random.normal(
+            k4, (max_enc, cfg.d_model), jnp.float32)).astype(dt),
+        "dec_pos": (0.02 * jax.random.normal(
+            k5, (max_dec or max_enc, cfg.d_model), jnp.float32)).astype(dt),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg))(dec_keys),
+        "enc_final_norm": _init_ln(cfg),
+        "dec_final_norm": _init_ln(cfg),
+    }
+
+
+def _ln(x, p, eps):
+    return L.layer_norm(x, p["w"], p["b"], eps)
+
+
+def encode(params, cfg: ModelConfig, frame_embeds,
+           constrain: L.Constrain = L._id_constrain):
+    """frame_embeds: (B, S_enc, D) from the stubbed conv frontend."""
+    S = frame_embeds.shape[1]
+    x = frame_embeds.astype(L.act_dtype_of(cfg)) + params["enc_pos"][:S]
+    x = constrain(x, "act_model")
+
+    def body(carry, bp):
+        h = _ln(carry, bp["attn_norm"], cfg.norm_eps)
+        attn_out, _ = L.attention_block(bp["attn"], cfg, h, None,
+                                        causal=False, constrain=constrain)
+        y = carry + attn_out
+        h2 = _ln(y, bp["mlp_norm"], cfg.norm_eps)
+        return y + L.mlp_gelu_block(bp["mlp"], h2, constrain=constrain), ()
+
+    x, _ = runtime.layer_scan(L.maybe_remat(body, cfg), x, params["enc_blocks"])
+    return _ln(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_out,
+                 constrain: L.Constrain = L._id_constrain,
+                 features_only: bool = False):
+    """Teacher-forced decoder pass.  Returns (B, S_dec, V) f32 logits."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens) + params["dec_pos"][:S]
+    x = constrain(x, "act_model")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(carry, bp):
+        h = _ln(carry, bp["self_norm"], cfg.norm_eps)
+        self_out, _ = L.attention_block(bp["self_attn"], cfg, h, positions,
+                                        causal=True, constrain=constrain)
+        y = carry + self_out
+        h2 = _ln(y, bp["cross_norm"], cfg.norm_eps)
+        enc_kv = L.encoder_kv(bp["cross_attn"], cfg, enc_out)
+        y = y + L.cross_attention_block(bp["cross_attn"], cfg, h2, enc_kv,
+                                        constrain=constrain)
+        h3 = _ln(y, bp["mlp_norm"], cfg.norm_eps)
+        return y + L.mlp_gelu_block(bp["mlp"], h3, constrain=constrain), ()
+
+    x, _ = runtime.layer_scan(L.maybe_remat(body, cfg), x, params["dec_blocks"])
+    x = _ln(x, params["dec_final_norm"], cfg.norm_eps)
+    if features_only:
+        return x
+    return L.unembed(params["embed"], cfg, x, constrain=constrain)
+
+
+def forward(params, cfg: ModelConfig, frame_embeds, tokens,
+            constrain: L.Constrain = L._id_constrain,
+            features_only: bool = False):
+    enc_out = encode(params, cfg, frame_embeds, constrain=constrain)
+    logits = decode_train(params, cfg, tokens, enc_out,
+                          constrain=constrain, features_only=features_only)
+    return logits, 0.0
+
+
+class EncDecCache(NamedTuple):
+    """Self-attn KV cache + precomputed cross-attn KV per decoder layer."""
+
+    k: jnp.ndarray        # (Ld, B, Smax, H, hd) self-attn
+    v: jnp.ndarray
+    cross_k: jnp.ndarray  # (Ld, B, S_enc, H, hd)
+    cross_v: jnp.ndarray
+    length: jnp.ndarray
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, batch: int, max_len: int, enc_len: int,
+              dtype=jnp.bfloat16):
+        Ld = cfg.num_decoder_layers
+        kv = (Ld, batch, max_len, cfg.num_kv_heads, cfg.hd())
+        ckv = (Ld, batch, enc_len, cfg.num_kv_heads, cfg.hd())
+        return cls(jnp.zeros(kv, dtype), jnp.zeros(kv, dtype),
+                   jnp.zeros(ckv, dtype), jnp.zeros(ckv, dtype),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def prefill(params, cfg: ModelConfig, frame_embeds, tokens, max_len: int,
+            constrain: L.Constrain = L._id_constrain,
+            cache_dtype=jnp.bfloat16):
+    """Encode + teacher-forced decoder prefill, returning the decode cache."""
+    enc_out = encode(params, cfg, frame_embeds, constrain=constrain)
+    B, S = tokens.shape
+    x = L.embed(params["embed"], cfg, tokens) + params["dec_pos"][:S]
+    x = constrain(x, "act_model")
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+
+    def body(carry, bp):
+        h = _ln(carry, bp["self_norm"], cfg.norm_eps)
+        self_out, (k, v) = L.attention_block(bp["self_attn"], cfg, h,
+                                             positions, causal=True,
+                                             constrain=constrain)
+        y = carry + self_out
+        h2 = _ln(y, bp["cross_norm"], cfg.norm_eps)
+        ck, cv = L.encoder_kv(bp["cross_attn"], cfg, enc_out)
+        y = y + L.cross_attention_block(bp["cross_attn"], cfg, h2, (ck, cv),
+                                        constrain=constrain)
+        h3 = _ln(y, bp["mlp_norm"], cfg.norm_eps)
+        y = y + L.mlp_gelu_block(bp["mlp"], h3, constrain=constrain)
+        return y, (jnp.pad(k.astype(cache_dtype), pad),
+                   jnp.pad(v.astype(cache_dtype), pad),
+                   ck.astype(cache_dtype), cv.astype(cache_dtype))
+
+    x, (ks, vs, cks, cvs) = runtime.layer_scan(body, x, params["dec_blocks"])
+    x = _ln(x, params["dec_final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x, constrain=constrain)
+    cache = EncDecCache(k=ks, v=vs, cross_k=cks, cross_v=cvs,
+                        length=jnp.full((B,), S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: EncDecCache,
+                constrain: L.Constrain = L._id_constrain):
+    B = tokens.shape[0]
+    pos = cache.length
+    x = L.embed(params["embed"], cfg, tokens) \
+        + params["dec_pos"][pos][:, None, :]
+    x = constrain(x, "act_model")
+
+    def body(carry, scanned):
+        bp, k_cache, v_cache, ck, cv = scanned
+        h = _ln(carry, bp["self_norm"], cfg.norm_eps)
+        self_out, nk, nv = L.attention_decode(bp["self_attn"], cfg, h,
+                                              k_cache, v_cache, pos,
+                                              constrain=constrain)
+        y = carry + self_out
+        h2 = _ln(y, bp["cross_norm"], cfg.norm_eps)
+        y = y + L.cross_attention_block(
+            bp["cross_attn"], cfg, h2,
+            (ck.astype(y.dtype), cv.astype(y.dtype)), constrain=constrain)
+        h3 = _ln(y, bp["mlp_norm"], cfg.norm_eps)
+        y = y + L.mlp_gelu_block(bp["mlp"], h3, constrain=constrain)
+        return y, (nk, nv)
+
+    x, (ks, vs) = runtime.layer_scan(body, x, (params["dec_blocks"], cache.k,
+                                         cache.v, cache.cross_k,
+                                         cache.cross_v))
+    x = _ln(x, params["dec_final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x, constrain=constrain)
+    return logits, cache._replace(k=ks, v=vs, length=cache.length + 1)

@@ -1,0 +1,183 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a single *shared* attention block
+applied every `shared_attn_every` layers (weights reused at each
+application).  54 layers with every=6 -> 9 super-blocks of (6 x mamba2 +
+1 x shared attention/MLP call).
+
+Scan structure: outer scan over super-blocks (stacked mamba params per
+super-block), shared block params closed over (broadcast).  The shared
+block's KV cache carries one cache slot per *application* (9 here).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import runtime
+from repro.models import mamba2
+
+
+def n_superblocks(cfg: ModelConfig) -> int:
+    k = cfg.shared_attn_every
+    assert k and cfg.num_layers % k == 0, \
+        f"num_layers={cfg.num_layers} must divide by shared_attn_every={k}"
+    return cfg.num_layers // k
+
+
+class HybridCache(NamedTuple):
+    """SSM cache for all mamba layers + KV cache per shared-attn call."""
+
+    conv: jnp.ndarray      # (L, B, W-1, conv_ch)
+    state: jnp.ndarray     # (L, B, H, N, P)
+    k: jnp.ndarray         # (n_super, B, Smax, Hkv, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray    # (B,)
+
+    @classmethod
+    def zeros(cls, cfg: ModelConfig, batch: int, max_len: int,
+              dtype=jnp.bfloat16):
+        d_inner, H, conv_ch = mamba2.dims(cfg)
+        ns = n_superblocks(cfg)
+        kv = (ns, batch, max_len, cfg.num_kv_heads, cfg.hd())
+        return cls(
+            jnp.zeros((cfg.num_layers, batch, cfg.ssm_conv_width - 1,
+                       conv_ch), dtype),
+            jnp.zeros((cfg.num_layers, batch, H, cfg.ssm_state,
+                       cfg.ssm_headdim), jnp.float32),
+            jnp.zeros(kv, dtype), jnp.zeros(kv, dtype),
+            jnp.zeros((batch,), jnp.int32))
+
+
+def init(rng, cfg: ModelConfig) -> dict:
+    k_emb, k_blocks, k_shared = jax.random.split(rng, 3)
+    ns = n_superblocks(cfg)
+    k_every = cfg.shared_attn_every
+    block_keys = jax.random.split(k_blocks, cfg.num_layers).reshape(
+        ns, k_every, 2)
+    mamba_blocks = jax.vmap(jax.vmap(lambda k: mamba2.init_block(k, cfg)))(
+        block_keys)
+    ks = jax.random.split(k_shared, 2)
+    shared = {
+        "attn_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "attn": L.init_attention(ks[0], cfg),
+        "mlp_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+        "mlp": L.init_mlp(ks[1], cfg),
+    }
+    return {
+        "embed": L.init_embed(k_emb, cfg),
+        "mamba_blocks": mamba_blocks,   # leaves (ns, k_every, ...)
+        "shared": shared,
+        "final_norm": jnp.ones((cfg.d_model,), L.dtype_of(cfg)),
+    }
+
+
+def _shared_apply(shared, cfg, x, positions, constrain):
+    h = L.rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+    attn_out, kv = L.attention_block(shared["attn"], cfg, h, positions,
+                                     causal=True, constrain=constrain)
+    x = x + attn_out
+    h = L.rms_norm(x, shared["mlp_norm"], cfg.norm_eps)
+    return x + L.mlp_block(shared["mlp"], h, constrain=constrain), kv
+
+
+def forward(params, cfg: ModelConfig, tokens,
+            constrain: L.Constrain = L._id_constrain,
+            features_only: bool = False):
+    x = L.embed(params["embed"], cfg, tokens)
+    x = constrain(x, "act_model")
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    shared = params["shared"]
+
+    def super_body(carry, sb_params):
+        def mamba_body(c, bp):
+            y, _ = mamba2.block_forward(bp, cfg, c, constrain=constrain)
+            return y, ()
+        y, _ = runtime.layer_scan(mamba_body, carry, sb_params)
+        y, _ = _shared_apply(shared, cfg, y, positions, constrain)
+        return y, ()
+
+    x, _ = runtime.layer_scan(L.maybe_remat(super_body, cfg), x,
+                        params["mamba_blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if features_only:
+        return x, 0.0
+    return L.unembed(params["embed"], cfg, x, constrain=constrain), 0.0
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int,
+            constrain: L.Constrain = L._id_constrain,
+            cache_dtype=jnp.bfloat16):
+    x = L.embed(params["embed"], cfg, tokens)
+    x = constrain(x, "act_model")
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    shared = params["shared"]
+    pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+
+    def super_body(carry, sb_params):
+        def mamba_body(c, bp):
+            y, (conv, state) = mamba2.block_forward(bp, cfg, c,
+                                                    constrain=constrain)
+            return y, (conv.astype(cache_dtype), state)
+        y, (convs, states) = runtime.layer_scan(mamba_body, carry, sb_params)
+        y, (k, v) = _shared_apply(shared, cfg, y, positions, constrain)
+        return y, (convs, states, jnp.pad(k.astype(cache_dtype), pad),
+                   jnp.pad(v.astype(cache_dtype), pad))
+
+    x, (convs, states, ks, vs) = runtime.layer_scan(super_body, x,
+                                              params["mamba_blocks"])
+    ns = n_superblocks(cfg)
+    d_inner, H, conv_ch = mamba2.dims(cfg)
+    convs = convs.reshape((cfg.num_layers,) + convs.shape[2:])
+    states = states.reshape((cfg.num_layers,) + states.shape[2:])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x, constrain=constrain)
+    cache = HybridCache(conv=convs, state=states, k=ks, v=vs,
+                        length=jnp.full((B,), S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache: HybridCache,
+                constrain: L.Constrain = L._id_constrain):
+    x = L.embed(params["embed"], cfg, tokens)
+    x = constrain(x, "act_model")
+    shared = params["shared"]
+    pos = cache.length
+    ns = n_superblocks(cfg)
+    k_every = cfg.shared_attn_every
+    conv_r = cache.conv.reshape((ns, k_every) + cache.conv.shape[1:])
+    state_r = cache.state.reshape((ns, k_every) + cache.state.shape[1:])
+
+    def super_body(carry, scanned):
+        sb_params, convs, states, k_cache, v_cache = scanned
+
+        def mamba_body(c, inner):
+            bp, conv, state = inner
+            y, (new_conv, new_state) = mamba2.block_decode(
+                bp, cfg, c, conv.astype(c.dtype), state, constrain=constrain)
+            return y, (new_conv.astype(conv.dtype), new_state)
+
+        y, (nconvs, nstates) = runtime.layer_scan(mamba_body, carry,
+                                            (sb_params, convs, states))
+        h = L.rms_norm(y, shared["attn_norm"], cfg.norm_eps)
+        attn_out, nk, nv = L.attention_decode(shared["attn"], cfg, h,
+                                              k_cache, v_cache, pos,
+                                              constrain=constrain)
+        y = y + attn_out
+        h2 = L.rms_norm(y, shared["mlp_norm"], cfg.norm_eps)
+        y = y + L.mlp_block(shared["mlp"], h2, constrain=constrain)
+        return y, (nconvs, nstates, nk, nv)
+
+    x, (convs, states, ks, vs) = runtime.layer_scan(
+        super_body, x, (params["mamba_blocks"], conv_r, state_r,
+                        cache.k, cache.v))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], cfg, x, constrain=constrain)
+    return logits, HybridCache(
+        conv=convs.reshape(cache.conv.shape),
+        state=states.reshape(cache.state.shape),
+        k=ks, v=vs, length=cache.length + 1)

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, AdamWState, adamw_init, adamw_update, global_norm,
+    cosine_schedule)

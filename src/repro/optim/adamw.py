@@ -1,0 +1,96 @@
+"""AdamW with f32 master weights, global-norm clipping, cosine schedule.
+
+Built from scratch (no optax in this environment).  The optimizer state
+holds f32 master params + moments; model params may be bf16.  State leaves
+carry the same structure as the params pytree, so the ZeRO-1 sharding rules
+in `repro.distributed.sharding` apply uniformly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray     # () int32
+    master: dict          # f32 copy of params
+    mu: dict              # f32 first moment
+    nu: dict              # f32 second moment
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = lambda t: jax.tree_util.tree_map(  # noqa: E731
+        lambda x: x.astype(jnp.float32), t)
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), master=f32(params),
+                      mu=zeros, nu=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def cosine_schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def adamw_update(grads, state: AdamWState, cfg: AdamWConfig,
+                 param_dtype=jnp.bfloat16):
+    """One optimizer step.  Returns (new_params (param_dtype), new_state,
+    metrics dict)."""
+    step = state.step + 1
+    lr = cosine_schedule(cfg, step)
+
+    g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = global_norm(g32)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12))
+    g32 = jax.tree_util.tree_map(lambda g: g * scale, g32)
+
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, g32)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, g32)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        return p - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                         + cfg.weight_decay * p)
+
+    master = jax.tree_util.tree_map(upd, state.master, mu, nu)
+    new_params = jax.tree_util.tree_map(
+        lambda x: x.astype(param_dtype), master)
+    new_state = AdamWState(step=step, master=master, mu=mu, nu=nu)
+    metrics = {"grad_norm": gnorm, "lr": lr,
+               "clip_scale": scale}
+    return new_params, new_state, metrics

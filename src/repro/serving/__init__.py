@@ -1,0 +1,1 @@
+from repro.serving.engine import GenerationEngine, Request  # noqa: F401

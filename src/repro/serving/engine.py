@@ -1,0 +1,75 @@
+"""Batched generation engine.
+
+Greedy (argmax) generation over a fixed-capacity batch: requests are padded
+to a common prompt grid, prefilled once, then decoded step-by-step with the
+family-appropriate cache (KV / SSM / hybrid / enc-dec).  Per-sequence EOS
+and length bookkeeping happen host-side; the device graph is two jitted
+functions (prefill_step, decode_step) shared across all requests.
+
+Left-padding: shorter prompts are left-padded so every sequence's last
+prompt token sits at the same position — the usual continuous-batching
+simplification for cache-aligned decode.  Positions/causality stay correct
+because padding tokens can only be attended *by* real tokens (harmless
+constants) and the first generated token attends the full prompt.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.steps import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray                 # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+
+
+class GenerationEngine:
+    def __init__(self, params, cfg: ModelConfig, max_len: int,
+                 batch_size: int, rules=None):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len, rules))
+        self._decode = jax.jit(make_decode_step(cfg, rules))
+
+    def _make_batch(self, requests: Sequence[Request]):
+        B = self.batch_size
+        if len(requests) > B:
+            raise ValueError(f"{len(requests)} requests > capacity {B}")
+        plen = max(r.prompt.shape[0] for r in requests)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - r.prompt.shape[0]:] = r.prompt  # left pad
+        return jnp.asarray(toks)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Run all requests to completion (greedy)."""
+        toks = self._make_batch(requests)
+        batch = {"tokens": toks}
+        next_tok, cache = self._prefill(self.params, batch)
+        max_new = max(r.max_new_tokens for r in requests)
+        outs = [next_tok]
+        for _ in range(max_new - 1):
+            next_tok, cache = self._decode(self.params, next_tok, cache)
+            outs.append(next_tok)
+        gen = np.concatenate([np.asarray(o) for o in outs], axis=1)
+        for i, r in enumerate(requests):
+            seq = gen[i, :r.max_new_tokens]
+            if r.eos_id is not None:
+                hits = np.nonzero(seq == r.eos_id)[0]
+                if hits.size:
+                    seq = seq[:hits[0] + 1]
+            r.output = seq
+        return requests

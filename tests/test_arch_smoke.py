@@ -1,0 +1,156 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned arch instantiates a REDUCED config of the same family and
+runs: one forward, one train step (loss decreases over 3 steps is NOT
+asserted here — see test_training.py), one prefill + decode step.  Asserts
+output shapes and finiteness.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import make_batch
+from repro.launch.steps import make_train_step, make_prefill_step, \
+    make_decode_step
+from repro.models import api
+from repro.optim import AdamWConfig, adamw_init
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=32, global_batch=2, kind="train")
+ARCHS = list(configs.ARCHS)
+
+
+def _reduced(name):
+    cfg = configs.get_reduced(name)
+    # f32 params keep smoke numerics clean on CPU
+    import dataclasses
+    return dataclasses.replace(cfg, param_dtype="float32",
+                               activation_dtype="float32")
+
+
+def _total_len(cfg, S):
+    if cfg.family == "vlm":
+        return S  # image + text = S
+    if cfg.family == "encdec":
+        from repro.models import whisper
+        return whisper.dec_seq_len(S)
+    return S
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_forward_shapes_and_finite(name):
+    cfg = _reduced(name)
+    params = api.init(jax.random.PRNGKey(0), cfg, SMOKE_SHAPE)
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    logits, aux = jax.jit(
+        lambda p, b: api.forward(p, cfg, b))(params, batch)
+    S_out = _total_len(cfg, SMOKE_SHAPE.seq_len)
+    assert logits.shape == (2, S_out, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_train_step(name):
+    cfg = _reduced(name)
+    params = api.init(jax.random.PRNGKey(0), cfg, SMOKE_SHAPE)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt_state = adamw_init(params)
+    step = jax.jit(make_train_step(cfg, opt_cfg))
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0.0
+    assert int(new_opt.step) == 1
+    # params must actually change
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, new_params)
+    assert max(jax.tree_util.tree_leaves(diffs)) > 0.0
+    # and stay finite
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("name", ARCHS)
+def test_prefill_decode(name):
+    cfg = _reduced(name)
+    params = api.init(jax.random.PRNGKey(0), cfg, SMOKE_SHAPE)
+    shape = ShapeConfig("smoke_serve", seq_len=32, global_batch=2,
+                        kind="prefill")
+    batch = make_batch(cfg, SMOKE_SHAPE)
+    batch.pop("labels")
+    max_len = 48
+    prefill = jax.jit(make_prefill_step(cfg, max_len))
+    decode = jax.jit(make_decode_step(cfg))
+    tok, cache = prefill(params, batch)
+    assert tok.shape == (2, 1)
+    for _ in range(3):
+        tok, cache = decode(params, tok, cache)
+        assert tok.shape == (2, 1)
+        assert bool(jnp.all((tok >= 0) & (tok < cfg.vocab_size)))
+
+
+@pytest.mark.parametrize("name", ["qwen3-1.7b", "mamba2-130m",
+                                  "zamba2-2.7b", "whisper-medium"])
+def test_decode_matches_forward(name):
+    """Greedy decode logits must match teacher-forced forward logits —
+    the KV/SSM cache correctness check."""
+    cfg = _reduced(name)
+    params = api.init(jax.random.PRNGKey(0), cfg, SMOKE_SHAPE)
+    B, S = 2, 16
+    rng = np.random.RandomState(0)
+
+    if cfg.family == "encdec":
+        frames = jnp.asarray(rng.randn(B, S, cfg.d_model), jnp.float32)
+        toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, 8)), jnp.int32)
+        full_logits, _ = api.forward(params, cfg,
+                                     {"frame_embeds": frames, "tokens": toks})
+        _, cache = api.prefill(params, cfg,
+                               {"frame_embeds": frames,
+                                "tokens": toks[:, :-1]}, max_len=16,
+                               cache_dtype=jnp.float32)
+        step_logits, _ = api.decode_step(params, cfg, toks[:, -1:], cache)
+        np.testing.assert_allclose(np.asarray(step_logits[:, 0]),
+                                   np.asarray(full_logits[:, -1]),
+                                   rtol=1e-3, atol=1e-4)
+        return
+
+    toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits, _ = api.forward(params, cfg, {"tokens": toks})
+    _, cache = api.prefill(params, cfg, {"tokens": toks[:, :-1]}, max_len=S,
+                           cache_dtype=jnp.float32)
+    step_logits, _ = api.decode_step(params, cfg, toks[:, -1:], cache)
+    np.testing.assert_allclose(np.asarray(step_logits[:, 0]),
+                               np.asarray(full_logits[:, -1]),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_param_counts_match_public_numbers():
+    """Full configs must land near their published parameter counts."""
+    cases = {
+        "llava-next-mistral-7b": (7.0e9, 0.15),
+        "granite-34b": (34e9, 0.15),
+        "qwen3-1.7b": (1.7e9, 0.30),
+        "qwen2-7b": (7.6e9, 0.15),
+        "stablelm-12b": (12e9, 0.15),
+        "mamba2-130m": (130e6, 0.30),
+        "qwen3-moe-30b-a3b": (30e9, 0.15),
+        "dbrx-132b": (132e9, 0.15),
+        "zamba2-2.7b": (2.7e9, 0.30),
+        "whisper-medium": (769e6, 0.30),
+    }
+    for name, (target, tol) in cases.items():
+        n = configs.get(name).param_count()
+        assert abs(n - target) / target < tol, \
+            f"{name}: {n/1e9:.2f}B vs public {target/1e9:.2f}B"
+
+
+def test_moe_active_params():
+    cfg = configs.get("qwen3-moe-30b-a3b")
+    active = cfg.active_param_count()
+    assert 2e9 < active < 4.5e9  # "a3b" = ~3B active

@@ -1,0 +1,103 @@
+"""Attention unit tests: GQA, causality, chunked == full, decode vs full."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import layers as L
+from repro.models import runtime
+
+
+def _rand(shape, seed=0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape),
+                       jnp.float32)
+
+
+class TestSDPA:
+    def test_causality(self):
+        """Changing a future token must not affect earlier outputs."""
+        B, S, H, hd = 2, 8, 4, 16
+        q, k, v = _rand((B, S, H, hd), 0), _rand((B, S, H, hd), 1), \
+            _rand((B, S, H, hd), 2)
+        out1 = L.sdpa(q, k, v, causal=True)
+        k2 = k.at[:, -1].set(99.0)
+        v2 = v.at[:, -1].set(99.0)
+        out2 = L.sdpa(q, k2, v2, causal=True)
+        np.testing.assert_allclose(np.asarray(out1[:, :-1]),
+                                   np.asarray(out2[:, :-1]), atol=1e-6)
+        assert np.abs(np.asarray(out1[:, -1]) - np.asarray(out2[:, -1])).max() > 0.01
+
+    def test_gqa_equals_repeated_mha(self):
+        B, S, H, Hkv, hd = 2, 8, 8, 2, 16
+        q = _rand((B, S, H, hd), 0)
+        k = _rand((B, S, Hkv, hd), 1)
+        v = _rand((B, S, Hkv, hd), 2)
+        out_gqa = L.sdpa(q, k, v, causal=True)
+        k_rep = jnp.repeat(k, H // Hkv, axis=2)
+        v_rep = jnp.repeat(v, H // Hkv, axis=2)
+        out_mha = L.sdpa(q, k_rep, v_rep, causal=True)
+        np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                                   rtol=1e-5, atol=1e-6)
+
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("chunk", [4, 8, 16])
+    def test_chunked_equals_full(self, causal, chunk):
+        B, S, H, hd = 2, 32, 4, 16
+        q, k, v = _rand((B, S, H, hd), 3), _rand((B, S, H, hd), 4), \
+            _rand((B, S, H, hd), 5)
+        full = L.sdpa(q, k, v, causal=causal)
+        with runtime.attn_q_chunk(chunk):
+            chunked = L.sdpa(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_kv_len_masks_cache_tail(self):
+        """Decode against a padded cache must ignore positions >= kv_len."""
+        B, S, H, hd = 2, 8, 2, 8
+        q = _rand((B, 1, H, hd), 0)
+        k = _rand((B, S, H, hd), 1)
+        v = _rand((B, S, H, hd), 2)
+        out1 = L.sdpa(q, k, v, causal=False,
+                      kv_len=jnp.array([4, 6]))
+        k2 = k.at[:, 7].set(1e3)
+        v2 = v.at[:, 7].set(1e3)
+        out2 = L.sdpa(q, k2, v2, causal=False,
+                      kv_len=jnp.array([4, 6]))
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                                   atol=1e-6)
+
+
+class TestRoPE:
+    def test_relative_property(self):
+        """RoPE dot products depend only on relative positions."""
+        B, S, H, hd = 1, 6, 1, 32
+        q = _rand((B, S, H, hd), 0)
+        k = _rand((B, S, H, hd), 1)
+        pos1 = jnp.broadcast_to(jnp.arange(S), (B, S))
+        pos2 = pos1 + 17
+        q1, k1 = L.rope(q, pos1, 1e4), L.rope(k, pos1, 1e4)
+        q2, k2 = L.rope(q, pos2, 1e4), L.rope(k, pos2, 1e4)
+        s1 = jnp.einsum("bqhd,bkhd->bqk", q1, k1)
+        s2 = jnp.einsum("bqhd,bkhd->bqk", q2, k2)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_zero_position_is_identity(self):
+        x = _rand((1, 1, 2, 16), 0)
+        pos = jnp.zeros((1, 1), jnp.int32)
+        np.testing.assert_allclose(np.asarray(L.rope(x, pos, 1e4)),
+                                   np.asarray(x), atol=1e-6)
+
+
+class TestNorms:
+    def test_rms_norm_unit_scale(self):
+        x = _rand((2, 3, 64), 0) * 7.0
+        y = L.rms_norm(x, jnp.ones((64,)), 1e-6)
+        rms = np.sqrt(np.mean(np.asarray(y) ** 2, axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_layer_norm_moments(self):
+        x = _rand((2, 3, 64), 1) * 3.0 + 5.0
+        y = L.layer_norm(x, jnp.ones((64,)), jnp.zeros((64,)), 1e-6)
+        np.testing.assert_allclose(np.mean(np.asarray(y), -1), 0.0, atol=1e-4)
+        np.testing.assert_allclose(np.var(np.asarray(y), -1), 1.0, rtol=1e-2)

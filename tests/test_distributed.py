@@ -1,0 +1,105 @@
+"""Distributed-layer tests.
+
+The halo-exchange propagator and the dry-run need >1 device; they run in a
+subprocess with forced host devices (XLA locks device count at first init,
+so the main test process, which sees 1 device, cannot host them).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV8 = {**os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def _run(args, env=None, timeout=900):
+    return subprocess.run([sys.executable, *args], cwd=REPO,
+                          env=env or ENV8, capture_output=True, text=True,
+                          timeout=timeout)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("T,order,n", [(1, 4, 32), (2, 4, 32), (4, 8, 64)])
+def test_distributed_equals_reference(T, order, n):
+    """Halo-exchanged temporally-blocked propagation == Listing-1 reference
+    on a 4x2 device mesh (paper contract, multi-device)."""
+    r = _run(["-m", "repro.launch.stencil_dist", "--check", "--n", str(n),
+              "--nt", "8", "--T", str(T), "--order", str(order)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "CHECK PASS" in r.stdout
+
+
+@pytest.mark.slow
+def test_halo_depth_guard():
+    r = _run(["-m", "repro.launch.stencil_dist", "--check", "--n", "16",
+              "--nt", "8", "--T", "8", "--order", "8"])
+    assert r.returncode != 0
+    assert "halo depth" in (r.stdout + r.stderr)
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_multipod():
+    """Multi-pod (2, 16, 16) mesh lower+compile for one representative
+    cell, inside the dry-run's own 512-device process."""
+    out = os.path.join(REPO, "results", "test_dryrun_cell.json")
+    r = _run(["-m", "repro.launch.dryrun", "--arch", "qwen3-1.7b",
+              "--shape", "decode_32k", "--multipod", "--out", out],
+             env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    rec = json.load(open(out))[0]
+    assert rec["status"] == "ok"
+    assert rec["devices"] == 512
+    assert rec["memory"]["temp_size_in_bytes"] > 0
+
+
+def test_sharding_rules_divisibility():
+    """Rules must never shard a non-divisible dim (MQA kv=1 over tp=16)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro import configs
+    from repro.distributed.sharding import ShardingRules
+    from repro.launch import mesh as mesh_lib
+    from repro.models import api
+
+    mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
+    cfg = configs.get("granite-34b")
+    rules = ShardingRules(mesh=mesh, cfg=cfg)
+    # fake tp=16 axis sizes by checking divisibility logic directly
+    params = api.param_specs(cfg, configs.TRAIN_4K)
+    specs = rules.param_pspecs(params)
+
+    def check(path, leaf, spec):
+        for d, ax in enumerate(spec):
+            if ax is not None:
+                assert leaf.shape[d] % rules.axis_size(ax) == 0
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), params, specs)
+
+
+def test_zero1_adds_data_sharding():
+    from repro import configs
+    from repro.distributed.sharding import ShardingRules
+    from repro.launch import mesh as mesh_lib
+    from repro.models import api
+    from repro.optim import adamw_init
+    import jax
+
+    mesh = mesh_lib.make_mesh((1, 1), ("data", "model"))
+    cfg = configs.get_reduced("qwen2-7b")
+    rules = ShardingRules(mesh=mesh, cfg=cfg)
+    params = api.param_specs(cfg, configs.TRAIN_4K)
+    opt = jax.eval_shape(lambda p: adamw_init(p), params)
+    specs = rules.opt_pspecs(opt)
+    # at least the large master leaves must carry a "data" axis
+    found = []
+    jax.tree_util.tree_map(
+        lambda s: found.append(any(ax == ("data",) or ax == "data"
+                                   for ax in s)), specs.master)
+    assert any(found)

@@ -1,0 +1,228 @@
+"""Integration tests for the three wave propagators (paper §III) and the
+temporal-blocking correctness contract: tiled execution == naive Listing-1
+execution for every propagator and any tile depth T."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import boundary, sources as S, temporal_blocking as tb
+from repro.core.grid import Grid
+from repro.core.propagators import acoustic, elastic, tti
+
+
+SHAPE = (24, 20, 22)
+SPACING = (10.0, 10.0, 10.0)
+GRID = Grid(shape=SHAPE, spacing=SPACING)
+NT = 12
+
+
+def _setup_acoustic(order=4):
+    vp = np.full(SHAPE, 1500.0)
+    vp[12:] = 2500.0  # two-layer model
+    m = jnp.asarray(1.0 / vp ** 2, jnp.float32)
+    damp = boundary.damping_field(SHAPE, nbl=4, spacing=SPACING)
+    params = acoustic.AcousticParams(m=m, damp=damp)
+    dt = GRID.cfl_dt(2500.0, order)
+    src = S.SparseOperator(np.array([[105.0, 95.0, 55.0]]))
+    wav = S.ricker_wavelet(NT, dt, f0=15.0)
+    g = S.precompute(src, GRID, wav)
+    rec = S.SparseOperator(np.array([[55.0, 95.0, 105.0],
+                                     [155.0, 95.0, 105.0]]))
+    gr = S.precompute_receivers(rec, GRID)
+    return params, dt, g, gr
+
+
+class TestAcoustic:
+    def test_propagates_energy(self):
+        params, dt, g, gr = _setup_acoustic()
+        state = acoustic.init_state(SHAPE)
+        final, recs = jax.jit(
+            lambda s: acoustic.propagate(NT, s, params, g, dt, GRID, 4,
+                                         receivers=gr))(state)
+        u = np.asarray(final.u)
+        assert np.all(np.isfinite(u))
+        assert np.abs(u).max() > 0.0
+        assert recs.shape == (NT, 2)
+        assert np.all(np.isfinite(np.asarray(recs)))
+
+    def test_zero_source_stays_zero(self):
+        params, dt, _, _ = _setup_acoustic()
+        state = acoustic.init_state(SHAPE)
+        final, _ = acoustic.propagate(NT, state, params, None, dt, GRID, 4)
+        np.testing.assert_array_equal(np.asarray(final.u), 0.0)
+
+    @pytest.mark.parametrize("order", [2, 4, 8, 12])
+    def test_stability_cfl(self, order):
+        """CFL-selected dt keeps the solution bounded for all space orders."""
+        params, dt, g, _ = _setup_acoustic(order)
+        state = acoustic.init_state(SHAPE)
+        final, _ = jax.jit(
+            lambda s: acoustic.propagate(30, s, params, g, dt, GRID, order)
+        )(state)
+        u = np.asarray(final.u)
+        assert np.all(np.isfinite(u))
+        assert np.abs(u).max() < 1e4
+
+    def test_zcompressed_injection_equivalent_run(self):
+        """Full run with Listing-5 (z-compressed) injection == scatter run."""
+        params, dt, g, _ = _setup_acoustic()
+        zc = S.z_compress(g)
+        scale = (dt * dt) / S.point_scale(params.m, g)
+
+        def inj_zc(u, t):
+            return S.inject_zcompressed(u, g, zc, t, scale=scale)
+
+        state = acoustic.init_state(SHAPE)
+        f_ref, _ = jax.jit(lambda s: acoustic.propagate(
+            NT, s, params, g, dt, GRID, 4))(state)
+        f_zc, _ = jax.jit(lambda s: acoustic.propagate(
+            NT, s, params, g, dt, GRID, 4, inject_fn=inj_zc))(state)
+        np.testing.assert_allclose(np.asarray(f_ref.u), np.asarray(f_zc.u),
+                                   atol=1e-6)
+
+
+class TestTTI:
+    def test_propagates_and_stable(self):
+        rng = np.random.RandomState(0)
+        vp = np.full(SHAPE, 2000.0)
+        m = jnp.asarray(1.0 / vp ** 2, jnp.float32)
+        damp = boundary.damping_field(SHAPE, nbl=4, spacing=SPACING)
+        params = tti.TTIParams(
+            m=m, damp=damp,
+            epsilon=jnp.asarray(0.1 + 0.05 * rng.rand(*SHAPE), jnp.float32),
+            delta=jnp.asarray(0.05 + 0.02 * rng.rand(*SHAPE), jnp.float32),
+            theta=jnp.asarray(0.2 * rng.rand(*SHAPE), jnp.float32),
+            phi=jnp.asarray(0.1 * rng.rand(*SHAPE), jnp.float32))
+        dt = 0.5 * GRID.cfl_dt(2000.0 * np.sqrt(1.3), 4)
+        src = S.SparseOperator(np.array([[105.0, 95.0, 105.0]]))
+        wav = S.ricker_wavelet(NT, dt, f0=15.0)
+        g = S.precompute(src, GRID, wav)
+        state = tti.init_state(SHAPE)
+        final, _ = jax.jit(
+            lambda s: tti.propagate(NT, s, params, g, dt, GRID, 4))(state)
+        p = np.asarray(final.p)
+        assert np.all(np.isfinite(p)) and np.abs(p).max() > 0.0
+
+    def test_isotropic_limit_matches_acoustic(self):
+        """epsilon = delta = theta = phi = 0 reduces TTI to acoustic."""
+        params_a, dt, g, _ = _setup_acoustic(order=4)
+        zero = jnp.zeros(SHAPE, jnp.float32)
+        params_t = tti.TTIParams(m=params_a.m, damp=params_a.damp,
+                                 epsilon=zero, delta=zero, theta=zero,
+                                 phi=zero)
+        sa = acoustic.init_state(SHAPE)
+        st_ = tti.init_state(SHAPE)
+        fa, _ = jax.jit(lambda s: acoustic.propagate(
+            NT, s, params_a, g, dt, GRID, 4))(sa)
+        ft, _ = jax.jit(lambda s: tti.propagate(
+            NT, s, params_t, g, dt, GRID, 4))(st_)
+        # TTI's laplacian is composed of nested first derivatives, which in
+        # the isotropic limit equals the direct 2nd-derivative laplacian only
+        # up to discretisation differences -> compare loosely but demand the
+        # same wavefront (high correlation).
+        a, t = np.asarray(fa.u).ravel(), np.asarray(ft.p).ravel()
+        corr = np.dot(a, t) / (np.linalg.norm(a) * np.linalg.norm(t) + 1e-30)
+        assert corr > 0.98
+
+
+class TestElastic:
+    def _setup(self, order=4):
+        vp = np.full(SHAPE, 2000.0)
+        vs = np.full(SHAPE, 1000.0)
+        rho = np.full(SHAPE, 1800.0)
+        mu = rho * vs ** 2
+        lam = rho * vp ** 2 - 2 * mu
+        params = elastic.ElasticParams(
+            lam=jnp.asarray(lam, jnp.float32),
+            mu=jnp.asarray(mu, jnp.float32),
+            b=jnp.asarray(1.0 / rho, jnp.float32),
+            damp=boundary.damping_field(SHAPE, nbl=4, spacing=SPACING))
+        dt = 0.5 * GRID.cfl_dt(2000.0, order)
+        src = S.SparseOperator(np.array([[105.0, 95.0, 55.0]]))
+        wav = S.ricker_wavelet(NT, dt, f0=12.0) * 1e3
+        g = S.precompute(src, GRID, wav)
+        return params, dt, g
+
+    def test_propagates_and_stable(self):
+        params, dt, g = self._setup()
+        state = elastic.init_state(SHAPE)
+        final, _ = jax.jit(lambda s: elastic.propagate(
+            NT, s, params, g, dt, GRID, 4))(state)
+        for f in final:
+            assert np.all(np.isfinite(np.asarray(f)))
+        assert np.abs(np.asarray(final.txx)).max() > 0.0
+        assert np.abs(np.asarray(final.vz)).max() > 0.0
+
+    def test_receivers_record(self):
+        params, dt, g = self._setup()
+        rec = S.SparseOperator(np.array([[55.0, 95.0, 105.0]]))
+        gr = S.precompute_receivers(rec, GRID)
+        state = elastic.init_state(SHAPE)
+        _, recs = jax.jit(lambda s: elastic.propagate(
+            NT, s, params, g, dt, GRID, 4, receivers=gr))(state)
+        assert recs.shape == (NT, 1, 2)
+        assert np.all(np.isfinite(np.asarray(recs)))
+
+
+class TestTemporalBlockingContract:
+    """Tiled drivers must equal the naive Listing-1 scan for any T —
+    the paper's data-dependency-preservation claim, post-alignment."""
+
+    @pytest.mark.parametrize("T", [1, 2, 3, 4, 8, 16])
+    def test_acoustic_tiled_equals_naive(self, T):
+        params, dt, g, gr = _setup_acoustic()
+        scale = (dt * dt) / S.point_scale(params.m, g)
+
+        def step_fn(state, t):
+            return acoustic.step(state, t, params, g, dt, SPACING, 4)
+
+        def rec_out(state, t):
+            return S.interpolate(state.u, gr)
+
+        state = acoustic.init_state(SHAPE)
+        ref_final, ref_recs = jax.jit(lambda s: acoustic.propagate(
+            NT, s, params, g, dt, GRID, 4, receivers=gr))(state)
+        tb_final, tb_recs = jax.jit(lambda s: tb.tiled_propagate(
+            step_fn, NT, T, s, per_step_out=rec_out))(state)
+        np.testing.assert_allclose(np.asarray(ref_final.u),
+                                   np.asarray(tb_final.u), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ref_recs),
+                                   np.asarray(tb_recs), atol=1e-6)
+
+    @pytest.mark.parametrize("T", [1, 3, 5])
+    def test_elastic_tiled_equals_naive(self, T):
+        te = TestElastic()
+        params, dt, g = te._setup()
+
+        def step_fn(state, t):
+            return elastic.step(state, t, params, g, dt, SPACING, 4)
+
+        state = elastic.init_state(SHAPE)
+        ref_final, _ = jax.jit(lambda s: elastic.propagate(
+            NT, s, params, g, dt, GRID, 4))(state)
+        tb_final, _ = jax.jit(lambda s: tb.tiled_propagate(
+            step_fn, NT, T, s))(state)
+        for a, b in zip(ref_final, tb_final):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+
+class TestTBPlanModel:
+    def test_overlap_factor_monotone_in_T(self):
+        p1 = tb.TBPlan((32, 32), 1, 2)
+        p4 = tb.TBPlan((32, 32), 4, 2)
+        p8 = tb.TBPlan((32, 32), 8, 2)
+        assert 1.0 < p1.overlap_factor() < p4.overlap_factor() \
+            < p8.overlap_factor()
+
+    def test_traffic_decreases_with_T(self):
+        b1 = tb.TBPlan((64, 64), 1, 2).hbm_bytes_per_point_step(64)
+        b8 = tb.TBPlan((64, 64), 8, 2).hbm_bytes_per_point_step(64)
+        assert b8 < b1 / 4  # ~T-fold reduction minus overlap
+
+    def test_autotune_respects_vmem(self):
+        plan, log = tb.autotune_plan(nz=64, radius=2,
+                                     vmem_budget=8 * 2 ** 20)
+        assert plan.vmem_bytes(64) <= 8 * 2 ** 20
+        assert len(log) > 0

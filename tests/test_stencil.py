@@ -1,0 +1,66 @@
+"""Unit tests for FD weights and stencil application."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import stencil as st
+
+
+def test_second_derivative_weights_order2():
+    np.testing.assert_allclose(st.second_derivative_weights(2), [1, -2, 1],
+                               atol=1e-12)
+
+
+def test_second_derivative_weights_order4():
+    np.testing.assert_allclose(
+        st.second_derivative_weights(4),
+        [-1 / 12, 4 / 3, -5 / 2, 4 / 3, -1 / 12], atol=1e-12)
+
+
+def test_first_derivative_weights_order2():
+    np.testing.assert_allclose(st.first_derivative_weights(2),
+                               [-0.5, 0, 0.5], atol=1e-12)
+
+
+@pytest.mark.parametrize("order", [2, 4, 8, 12])
+def test_weights_exact_on_polynomials(order):
+    # order-p weights must differentiate polynomials of degree <= order exactly
+    w = st.second_derivative_weights(order)
+    r = order // 2
+    offs = np.arange(-r, r + 1, dtype=np.float64)
+    for deg in range(order + 1):
+        val = np.sum(w * offs ** deg)
+        expect = deg * (deg - 1) * (0.0 ** (deg - 2)) if deg >= 2 else 0.0
+        expect = 2.0 if deg == 2 else 0.0
+        np.testing.assert_allclose(val, expect, atol=1e-7)
+
+
+@pytest.mark.parametrize("order", [2, 4, 8])
+def test_laplacian_of_quadratic(order):
+    # u = x^2 + 2 y^2 + 3 z^2 -> lap u = 12, away from boundaries
+    n, h = 16, 0.5
+    ax = np.arange(n) * h
+    x, y, z = np.meshgrid(ax, ax, ax, indexing="ij")
+    u = jnp.asarray(x ** 2 + 2 * y ** 2 + 3 * z ** 2, jnp.float32)
+    lap = st.laplacian(u, (h, h, h), order)
+    r = order // 2
+    interior = lap[r:-r, r:-r, r:-r]
+    np.testing.assert_allclose(np.asarray(interior), 12.0, rtol=1e-4)
+
+
+@pytest.mark.parametrize("order", [2, 4, 8])
+def test_staggered_derivative_linear(order):
+    # d/dx of a linear ramp is exact for any staggered order
+    n, h = 24, 0.25
+    x = np.arange(n) * h
+    u = jnp.asarray(np.tile(x[:, None], (1, 4)) * 3.0)
+    d = st.staggered_derivative(u, 0, h, order, +1)
+    half = order // 2
+    interior = d[half:-half]
+    np.testing.assert_allclose(np.asarray(interior), 3.0, rtol=1e-5)
+
+
+def test_shifted_zero_fill():
+    u = jnp.arange(5.0)
+    out = st.shifted(u, 2, 0, 2)
+    np.testing.assert_allclose(np.asarray(out), [2, 3, 4, 0, 0])

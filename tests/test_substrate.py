@@ -1,0 +1,177 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint manager."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+from repro.data.pipeline import SyntheticLM
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         cosine_schedule, global_norm)
+
+
+class TestAdamW:
+    def _params(self):
+        return {"w": jnp.ones((4, 4), jnp.bfloat16),
+                "b": jnp.zeros((4,), jnp.bfloat16)}
+
+    def test_minimizes_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=200, min_lr_ratio=1.0)
+        params = {"x": jnp.asarray([5.0, -3.0])}
+        state = adamw_init(params)
+
+        @jax.jit
+        def step(params, state):
+            grads = {"x": 2.0 * state.master["x"]}  # d/dx x^2, from master
+            return adamw_update(grads, state, cfg, param_dtype=jnp.float32)
+
+        for _ in range(150):
+            params, state, _ = step(params, state)
+        assert float(jnp.abs(state.master["x"]).max()) < 0.05
+
+    def test_clipping(self):
+        cfg = AdamWConfig(clip_norm=1.0)
+        params = self._params()
+        state = adamw_init(params)
+        grads = jax.tree_util.tree_map(lambda x: 1e3 * jnp.ones_like(x),
+                                       params)
+        _, _, m = adamw_update(grads, state, cfg)
+        assert float(m["clip_scale"]) < 1e-2
+        assert float(m["grad_norm"]) > 1e3
+
+    def test_weight_decay_shrinks(self):
+        cfg = AdamWConfig(lr=1e-2, weight_decay=0.5, warmup_steps=0)
+        params = self._params()
+        state = adamw_init(params)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        new_params, _, _ = adamw_update(zeros, state, cfg)
+        assert float(new_params["w"].astype(jnp.float32).mean()) < 1.0
+
+    def test_schedule_shape(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_ratio=0.1)
+        lrs = [float(cosine_schedule(cfg, jnp.asarray(s)))
+               for s in [0, 5, 10, 55, 100, 1000]]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(0.5, rel=0.01)
+        assert lrs[2] == pytest.approx(1.0, rel=0.01)
+        assert 0.1 < lrs[3] < 1.0
+        assert lrs[4] == pytest.approx(0.1, rel=0.01)
+        assert lrs[5] == pytest.approx(0.1, rel=0.01)
+
+    def test_master_weights_precision(self):
+        """bf16 params round-trip through f32 master without drift."""
+        cfg = AdamWConfig(lr=0.0, weight_decay=0.0)
+        params = self._params()
+        state = adamw_init(params)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        new_params, new_state, _ = adamw_update(zeros, state, cfg)
+        assert new_state.master["w"].dtype == jnp.float32
+        assert new_params["w"].dtype == jnp.bfloat16
+
+
+class TestData:
+    def test_determinism(self):
+        ds = SyntheticLM(vocab_size=128, seq_len=16, global_batch=8)
+        a = ds.batch_at(3, 0, 2)
+        b = ds.batch_at(3, 0, 2)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_shards_disjoint_and_labels_shifted(self):
+        ds = SyntheticLM(vocab_size=128, seq_len=16, global_batch=8)
+        a = ds.batch_at(0, 0, 2)
+        b = ds.batch_at(0, 1, 2)
+        assert a["tokens"].shape == (4, 16)
+        assert not np.array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+    def test_learnable_structure(self):
+        """Next token is a deterministic-ish function of the previous one:
+        same prev token -> low conditional entropy."""
+        ds = SyntheticLM(vocab_size=64, seq_len=256, global_batch=4)
+        b = ds.batch_at(0)
+        toks = b["tokens"]
+        # check the Markov recurrence bound: next in [31*prev % 64, +4)
+        nxt = (31 * toks[:, :-1]) % 64
+        diff = (toks[:, 1:] - nxt) % 64
+        assert diff.max() < 4
+
+    @settings(max_examples=10, deadline=None)
+    @given(step=hst.integers(0, 1000), dp=hst.sampled_from([1, 2, 4, 8]))
+    def test_property_elastic_repartition(self, step, dp):
+        """Re-sharding preserves the global batch content (elasticity)."""
+        ds = SyntheticLM(vocab_size=99, seq_len=8, global_batch=8)
+        whole = np.concatenate([ds.batch_at(step, r, dp)["tokens"]
+                                for r in range(dp)], axis=0)
+        base = np.concatenate([ds.batch_at(step, r, 8)["tokens"]
+                               for r in range(8)], axis=0)
+        # same multiset of rows regardless of dp (rank-major order)
+        assert sorted(map(tuple, whole.tolist())) == \
+            sorted(map(tuple, base.tolist()))
+
+
+class TestCheckpoint:
+    def _tree(self, seed=0):
+        rng = np.random.RandomState(seed)
+        return {"a": jnp.asarray(rng.randn(4, 3), jnp.float32),
+                "nested": {"b": jnp.asarray(rng.randn(2), jnp.bfloat16),
+                           "step": jnp.asarray(7, jnp.int32)}}
+
+    def test_roundtrip(self, tmp_path):
+        tree = self._tree()
+        save_pytree(str(tmp_path / "ck"), tree, {"note": "x"})
+        out = load_pytree(str(tmp_path / "ck"), tree)
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                       np.asarray(b)),
+            tree, out)
+
+    def test_manager_retention_and_resume(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (10, 20, 30):
+            mgr.save(s, self._tree(s))
+        assert mgr.steps() == [20, 30]
+        step, tree = mgr.restore(self._tree())
+        assert step == 30
+        ref = self._tree(30)
+        np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                      np.asarray(ref["a"]))
+
+    def test_async_save(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(1, self._tree(1), blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 1
+
+    def test_crash_leaves_no_partial(self, tmp_path):
+        """A directory without MANIFEST (simulated crash) is not trusted."""
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(5, self._tree())
+        os.makedirs(str(tmp_path / "step_0000000009"))  # no manifest
+        assert mgr.latest_step() == 5
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save_pytree(str(tmp_path / "ck"), self._tree())
+        bad = {"a": jnp.zeros((5, 3)), "nested": {"b": jnp.zeros((2,)),
+                                                  "step": jnp.zeros(())}}
+        with pytest.raises(ValueError):
+            load_pytree(str(tmp_path / "ck"), bad)
+
+    def test_elastic_restore_to_new_sharding(self, tmp_path):
+        """Checkpoint saved 'globally' re-places onto any sharding."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch import mesh as mesh_lib
+        mesh = mesh_lib.make_mesh((1,), ("data",))
+        tree = self._tree()
+        mgr = CheckpointManager(str(tmp_path), keep=1)
+        mgr.save(1, tree)
+        sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), tree)
+        step, out = mgr.restore_sharded(tree, sh)
+        assert step == 1
+        assert out["a"].sharding.is_equivalent_to(
+            NamedSharding(mesh, P()), 2)

@@ -1,0 +1,72 @@
+"""End-to-end behaviour tests for the paper's system.
+
+One test drives the full pipeline the paper describes — off-the-grid
+geometry, precompute, temporally-blocked propagation via the Pallas kernel,
+receiver measurement — and checks it against the naive Listing-1 semantics;
+a second exercises the autotune -> plan -> kernel path the production
+launcher uses.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import boundary, sources as S
+from repro.core.grid import Grid
+from repro.core.temporal_blocking import TBPlan, autotune_plan
+from repro.kernels import ops, ref
+
+
+def _problem(shape=(32, 32, 16), nt=12, order=4, nsrc=3, nrec=5, seed=7):
+    grid = Grid(shape=shape, spacing=(10.0,) * 3)
+    rng = np.random.RandomState(seed)
+    vp = 1500.0 + 1200.0 * rng.rand(*shape)
+    m = jnp.asarray(1.0 / vp ** 2, jnp.float32)
+    damp = boundary.damping_field(shape, nbl=4, spacing=grid.spacing)
+    dt = grid.cfl_dt(2700.0, order)
+    ext = np.asarray(grid.extent)
+    src = S.SparseOperator(5.0 + rng.rand(nsrc, 3) * (ext - 10.0))
+    wav = S.ricker_wavelet(nt, dt, f0=12.0, num=nsrc)
+    g = S.precompute(src, grid, wav)
+    rec = S.SparseOperator(5.0 + rng.rand(nrec, 3) * (ext - 10.0))
+    gr = S.precompute_receivers(rec, grid)
+    return grid, m, damp, dt, g, gr
+
+
+def test_full_pipeline_shot():
+    """Geometry -> precompute -> TB kernel propagation -> shot gather,
+    equal to the Listing-1 reference end to end."""
+    grid, m, damp, dt, g, gr = _problem()
+    nt, order = 12, 4
+    u0 = jnp.zeros(grid.shape, jnp.float32)
+    plan = TBPlan(tile=(16, 16), T=4, radius=order // 2)
+
+    (k0, k1), k_recs = ops.acoustic_tb_propagate(
+        nt, u0, u0, m, damp, g, gr, plan, order, dt, grid.spacing)
+    (r0, r1), r_recs = ref.acoustic_reference(
+        nt, u0, u0, m, damp, dt, grid.spacing, order, g=g, receivers=gr)
+
+    scale = float(jnp.max(jnp.abs(r1))) + 1e-30
+    assert float(jnp.max(jnp.abs(k1 - r1))) <= 5e-4 * scale
+    np.testing.assert_allclose(np.asarray(k_recs), np.asarray(r_recs),
+                               rtol=5e-3, atol=1e-6)
+    # physical sanity: energy radiated, gather finite, not identically zero
+    assert np.abs(np.asarray(k_recs)).max() > 0
+    assert np.isfinite(np.asarray(k_recs)).all()
+
+
+def test_autotuned_plan_runs_in_kernel():
+    """The production path: autotune under a VMEM budget, then execute."""
+    grid, m, damp, dt, g, gr = _problem(shape=(32, 16, 16), nt=8)
+    plan, log = autotune_plan(nz=grid.shape[2], radius=2,
+                              tiles=(8, 16), depths=(1, 2, 4),
+                              vmem_budget=32 * 2 ** 20)
+    assert plan.vmem_bytes(grid.shape[2]) <= 32 * 2 ** 20
+    # tile must divide this grid; fall back like the launcher does
+    tile = tuple(min(t, s) for t, s in zip(plan.tile, grid.shape[:2]))
+    plan = TBPlan(tile=tile, T=plan.T, radius=plan.radius)
+    u0 = jnp.zeros(grid.shape, jnp.float32)
+    (a0, a1), recs = ops.acoustic_tb_propagate(
+        8, u0, u0, m, damp, g, gr, plan, 4, dt, grid.spacing)
+    (b0, b1), _ = ref.acoustic_reference(
+        8, u0, u0, m, damp, dt, grid.spacing, 4, g=g, receivers=gr)
+    scale = float(jnp.max(jnp.abs(b1))) + 1e-30
+    assert float(jnp.max(jnp.abs(a1 - b1))) <= 5e-4 * scale
