@@ -43,12 +43,41 @@ def acoustic_setup(n=32, order=4, nt=8, nsrc=1, seed=0):
     return grid, m, damp, dt, g
 
 
+def elastic_setup(n=32, order=4, nt=8, nsrc=1, seed=0):
+    """Elastic model on the acoustic_setup geometry (Lame from vp, vs, rho)."""
+    from repro.core.propagators import elastic as el
+    grid, m, damp, dt, g = acoustic_setup(n=n, order=order, nt=nt, nsrc=nsrc,
+                                          seed=seed)
+    shape = grid.shape
+    vp = 1.0 / np.sqrt(np.asarray(m))
+    vs = vp / 1.9
+    rho = np.full(shape, 2100.0)
+    params = el.ElasticParams(
+        lam=jnp.asarray(rho * (vp ** 2 - 2 * vs ** 2) * 1e-6, jnp.float32),
+        mu=jnp.asarray(rho * vs ** 2 * 1e-6, jnp.float32),
+        b=jnp.asarray(1.0 / rho, jnp.float32),
+        damp=damp)
+    return grid, params, dt, g
+
+
+def tti_setup(n=32, order=4, nt=8, nsrc=1, seed=0):
+    """TTI model on the acoustic_setup geometry (mild Thomsen/tilt fields)."""
+    from repro.core.propagators import tti as tt
+    grid, m, damp, dt, g = acoustic_setup(n=n, order=order, nt=nt, nsrc=nsrc,
+                                          seed=seed)
+    rng = np.random.RandomState(seed)
+    shape = grid.shape
+    params = tt.TTIParams(
+        m=m, damp=damp,
+        epsilon=jnp.asarray(0.2 * rng.rand(*shape), jnp.float32),
+        delta=jnp.asarray(0.1 * rng.rand(*shape), jnp.float32),
+        theta=jnp.asarray(0.3 * rng.randn(*shape), jnp.float32),
+        phi=jnp.asarray(0.3 * rng.randn(*shape), jnp.float32))
+    return grid, params, dt, g
+
+
 # TPU-target per-point-step FLOP counts for the three paper kernels
 def flops_per_point(propagator: str, order: int) -> float:
     from repro.core.propagators import acoustic, elastic, tti
     fn = {"acoustic": acoustic, "tti": tti, "elastic": elastic}[propagator]
     return fn.model_flops_per_step((1, 1, 1), order)
-
-
-# f32 fields read+written per point-step (no temporal blocking)
-FIELDS_RW = {"acoustic": 5, "tti": 12, "elastic": 22}

@@ -16,7 +16,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from benchmarks.fig9_speedup import READS, TB_WRITES, modeled_throughputs
+from benchmarks.fig9_speedup import modeled_throughputs
 from repro.core import sources as S
 from repro.core.grid import Grid
 from repro.core.stencil import stencil_flops_per_point

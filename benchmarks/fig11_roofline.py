@@ -10,25 +10,21 @@ Output CSV: kernel,order,schedule,AI,gflops
 from __future__ import annotations
 
 from benchmarks.common import HBM_BW, PEAK_FLOPS_BF16, emit, flops_per_point
-from benchmarks.fig9_speedup import READS, TB_WRITES
-from repro.core.temporal_blocking import autotune_plan
+from repro.core.temporal_blocking import PHYSICS_COSTS, plan_for_physics
 
 
 def run(nz: int = 512):
     rows = []
+    pc = PHYSICS_COSTS["acoustic"]
     for order in (4, 8, 12):
         f_pt = flops_per_point("acoustic", order)
-        bytes_sb = (READS["acoustic"] + WRITES_SB) * 4.0
+        bytes_sb = (pc.read_fields + pc.evolved_fields) * 4.0
         ai_sb = f_pt / bytes_sb
         g_sb = min(PEAK_FLOPS_BF16, ai_sb * HBM_BW) / 1e9
-        plan, _ = autotune_plan(nz=nz, radius=order // 2,
-                                flops_per_point=f_pt,
-                                fields=READS["acoustic"] + 1,
-                                read_fields=READS["acoustic"],
-                                write_fields=TB_WRITES["acoustic"])
+        plan, _ = plan_for_physics("acoustic", nz=nz, order=order)
         bytes_tb = plan.hbm_bytes_per_point_step(
-            nz, read_fields=READS["acoustic"],
-            write_fields=TB_WRITES["acoustic"])
+            nz, read_fields=pc.read_fields,
+            write_fields=pc.write_fields)
         ai_tb = f_pt * plan.overlap_factor() / bytes_tb
         g_tb = min(PEAK_FLOPS_BF16, ai_tb * HBM_BW) / 1e9
         rows.append((order, ai_sb, g_sb, ai_tb, g_tb))
@@ -38,9 +34,6 @@ def run(nz: int = 512):
              f"AI={ai_tb:.2f} gflops={g_tb:.0f} T={plan.T} "
              f"tile={plan.tile}")
     return rows
-
-
-WRITES_SB = 1
 
 
 def main():

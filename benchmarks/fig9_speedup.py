@@ -8,62 +8,70 @@ TPU-target numbers are ROOFLINE-MODELED throughputs (GPoints/s):
 
 with bytes_pt(TB) from the trapezoidal traffic model (tile/T autotuned under
 the VMEM budget, as Table I collapses to on TPU) and flops_pt(TB) including
-the redundant-rim overlap factor.  Alongside, a MEASURED CPU wall-clock of
-the pure-JAX reference propagator is reported for scale (not a claim).
+the redundant-rim overlap factor.  Field counts, per-step halo radius and
+FLOP density come from the per-physics registry
+(`temporal_blocking.PHYSICS_COSTS`).  Elastic's 13 windows make it the
+most bandwidth-bound physics in absolute terms, but its doubled per-step
+halo (and TTI's flop density) also shrink the TB window: both gain only at
+low space order and autotune back to the spatially-blocked schedule by
+SO-8/12, while acoustic keeps the largest modeled speedup — the same
+qualitative order-dependence the paper reports around its SO-12 result.
+Alongside, a MEASURED CPU wall-clock of the pure-JAX reference
+propagator is reported for every physics for scale (not a claim).
 Output CSV: kernel,order,thr_sb,thr_tb,modeled_speedup,cpu_gpts
 """
 from __future__ import annotations
 
 import jax
 
-from benchmarks.common import (FIELDS_RW, HBM_BW, PEAK_FLOPS_BF16,
-                               acoustic_setup, emit, flops_per_point,
-                               time_fn)
-from repro.core.temporal_blocking import autotune_plan
-
-
-# naive per-point-step field traffic (reads, writes) x f32
-READS = {"acoustic": 4, "tti": 10, "elastic": 13}
-WRITES = {"acoustic": 1, "tti": 2, "elastic": 9}
-# TB write-back: both time levels of every evolved field
-TB_WRITES = {"acoustic": 2, "tti": 4, "elastic": 9}
+from benchmarks.common import (HBM_BW, PEAK_FLOPS_BF16, acoustic_setup,
+                               elastic_setup, emit, flops_per_point, time_fn,
+                               tti_setup)
+from repro.core.temporal_blocking import PHYSICS_COSTS, plan_for_physics
 
 
 def modeled_throughputs(propagator: str, order: int, nz: int = 512):
+    pc = PHYSICS_COSTS[propagator]
     f_pt = flops_per_point(propagator, order)
-    reads, writes = READS[propagator], WRITES[propagator]
-    bytes_sb = (reads + writes) * 4.0
+    # naive schedule: read all fields, write only the freshly evolved ones
+    bytes_sb = (pc.read_fields + pc.evolved_fields) * 4.0
     thr_sb = min(PEAK_FLOPS_BF16 / f_pt, HBM_BW / bytes_sb)
 
-    plan, _ = autotune_plan(
-        nz=nz, radius=order // 2, flops_per_point=f_pt,
-        fields=reads + 1, dtype_bytes=4,  # VMEM: all read windows + scratch
-        read_fields=reads, write_fields=TB_WRITES[propagator])
+    plan, _ = plan_for_physics(propagator, nz=nz, order=order)
     bytes_tb = plan.hbm_bytes_per_point_step(
-        nz, read_fields=reads, write_fields=TB_WRITES[propagator],
+        nz, read_fields=pc.read_fields, write_fields=pc.write_fields,
         dtype_bytes=4)
     f_tb = f_pt * plan.overlap_factor()
     thr_tb = min(PEAK_FLOPS_BF16 / f_tb, HBM_BW / bytes_tb)
     return thr_sb, thr_tb, plan
 
 
+def _measure_cpu(prop: str, order: int, n: int, nt: int) -> float:
+    """Wall-clock GPoints/s of the jitted pure-JAX reference propagator."""
+    if prop == "acoustic":
+        from repro.core.propagators import acoustic as mod
+        grid, m, damp, dt, g = acoustic_setup(n=n, order=order, nt=nt)
+        params = mod.AcousticParams(m=m, damp=damp)
+    elif prop == "tti":
+        from repro.core.propagators import tti as mod
+        grid, params, dt, g = tti_setup(n=n, order=order, nt=nt)
+    else:
+        from repro.core.propagators import elastic as mod
+        grid, params, dt, g = elastic_setup(n=n, order=order, nt=nt)
+    state = mod.init_state(grid.shape)
+    fn = jax.jit(lambda s: mod.propagate(nt, s, params, g, dt, grid,
+                                         order)[0][0])
+    t = time_fn(fn, state)
+    return grid.npoints * nt / t / 1e9
+
+
 def run(cpu_measure: bool = True, n: int = 32, nt: int = 8):
-    import jax.numpy as jnp
-    from repro.core.propagators import acoustic
     rows = []
     for prop in ("acoustic", "tti", "elastic"):
         for order in (4, 8, 12):
             thr_sb, thr_tb, plan = modeled_throughputs(prop, order)
-            cpu_gpts = 0.0
-            if cpu_measure and prop == "acoustic":
-                grid, m, damp, dt, g = acoustic_setup(n=n, order=order,
-                                                      nt=nt)
-                params = acoustic.AcousticParams(m=m, damp=damp)
-                state = acoustic.init_state(grid.shape)
-                fn = jax.jit(lambda s: acoustic.propagate(
-                    nt, s, params, g, dt, grid, order)[0].u)
-                t = time_fn(fn, state)
-                cpu_gpts = grid.npoints * nt / t / 1e9
+            cpu_gpts = _measure_cpu(prop, order, n, nt) if cpu_measure \
+                else 0.0
             speedup = thr_tb / thr_sb
             # production picks the better schedule (paper SO-12: no TB gain)
             chosen = "TB" if speedup > 1.0 else "SB"

@@ -8,30 +8,26 @@ Output CSV: kernel,order,tile_x,tile_y,T,overlap,bytes_pt,modeled_cost
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, flops_per_point
-from benchmarks.fig9_speedup import READS, TB_WRITES
-from repro.core.temporal_blocking import autotune_plan
+from benchmarks.common import emit
+from repro.core.temporal_blocking import PHYSICS_COSTS, plan_for_physics
 
 
 def run(nz: int = 512):
     rows = []
     for prop in ("acoustic", "tti", "elastic"):
+        pc = PHYSICS_COSTS[prop]
         for order in (4, 8, 12):
-            f_pt = flops_per_point(prop, order)
-            plan, log = autotune_plan(
-                nz=nz, radius=order // 2, flops_per_point=f_pt,
-                fields=READS[prop] + 1, dtype_bytes=4,
-                read_fields=READS[prop], write_fields=TB_WRITES[prop])
+            plan, log = plan_for_physics(prop, nz=nz, order=order)
             cost = log[(plan.tile[0], plan.tile[1], plan.T)]
             bpt = plan.hbm_bytes_per_point_step(
-                nz, read_fields=READS[prop],
-                write_fields=TB_WRITES[prop], dtype_bytes=4)
+                nz, read_fields=pc.read_fields,
+                write_fields=pc.write_fields, dtype_bytes=4)
             rows.append((prop, order, plan, cost))
             emit(f"table1/{prop}-O{order}", 0.0,
                  f"tile={plan.tile[0]}x{plan.tile[1]} T={plan.T} "
                  f"overlap={plan.overlap_factor():.3f} "
                  f"bytes_pt={bpt:.2f} "
-                 f"vmem_MiB={plan.vmem_bytes(nz, READS[prop]+1)/2**20:.0f} "
+                 f"vmem_MiB={plan.vmem_bytes(nz, pc.fields)/2**20:.0f} "
                  f"candidates={len(log)}")
     return rows
 

@@ -62,7 +62,19 @@ def _d(u, axis, h, order, operand_bit):
 
 
 def stencil_update(state: ElasticState, params: ElasticParams, dt: float,
-                   spacing: Tuple[float, ...], order: int) -> ElasticState:
+                   spacing: Tuple[float, ...], order: int,
+                   mask_fn=None) -> ElasticState:
+    """One velocity-stress leapfrog step.
+
+    `mask_fn` (optional) is applied to the *new* velocities before the
+    stress update reads them.  On the full grid the default (identity) is
+    correct: derivatives zero-pad at the domain boundary.  Inside the
+    temporally-blocked kernel the same math runs on a tile window whose
+    edge lies inside the domain, so the TB driver passes a domain mask
+    that re-zeroes the out-of-domain rim — without it the intermediate
+    velocities would be non-zero outside the physical domain and corrupt
+    the stress derivatives near the boundary (see kernels/tb_physics.py).
+    """
     hx, hy, hz = spacing
     dt = jnp.asarray(dt, state.vx.dtype)
     dmp = 1.0 / (1.0 + params.damp * dt)
@@ -77,6 +89,9 @@ def stencil_update(state: ElasticState, params: ElasticParams, dt: float,
     vz = dmp * (state.vz + dt * params.b * (
         _d(state.txz, 0, hx, order, 1) + _d(state.tyz, 1, hy, order, 1)
         + _d(state.tzz, 2, hz, order, 0)))
+
+    if mask_fn is not None:
+        vx, vy, vz = mask_fn(vx), mask_fn(vy), mask_fn(vz)
 
     # --- stress update (leapfrog: uses the *new* velocities) ----------------
     dvx_dx = _d(vx, 0, hx, order, 1)

@@ -72,24 +72,38 @@ def _dir_derivative(u, w3, spacing, order):
 
 
 def rotated_laplacians(u: jnp.ndarray, params: TTIParams,
-                       spacing: Tuple[float, ...], order: int):
-    """(H0, Hz)(u) — the rotated horizontal/vertical Laplacians."""
+                       spacing: Tuple[float, ...], order: int,
+                       mask_fn=None):
+    """(H0, Hz)(u) — the rotated horizontal/vertical Laplacians.
+
+    `mask_fn` (optional) is applied to the inner first-derivative pass
+    before the outer pass reads it.  On the full grid the identity default
+    is correct (the outer derivative zero-pads the inner field at the
+    domain boundary); inside the temporally-blocked kernel the window edge
+    lies inside the domain, so the TB driver passes a domain mask that
+    re-zeroes the inner field on the out-of-domain rim — the window
+    analogue of that zero padding (see kernels/tb_physics.py).
+    """
     dx_w, dy_w, dz_w = _rotated_dirs(params)
-    gxx = _dir_derivative(_dir_derivative(u, dx_w, spacing, order),
+    mask = (lambda a: a) if mask_fn is None else mask_fn
+    gxx = _dir_derivative(mask(_dir_derivative(u, dx_w, spacing, order)),
                           dx_w, spacing, order)
-    gyy = _dir_derivative(_dir_derivative(u, dy_w, spacing, order),
+    gyy = _dir_derivative(mask(_dir_derivative(u, dy_w, spacing, order)),
                           dy_w, spacing, order)
-    gzz = _dir_derivative(_dir_derivative(u, dz_w, spacing, order),
+    gzz = _dir_derivative(mask(_dir_derivative(u, dz_w, spacing, order)),
                           dz_w, spacing, order)
     return gxx + gyy, gzz
 
 
 def stencil_update(state: TTIState, params: TTIParams, dt: float,
-                   spacing: Tuple[float, ...], order: int):
+                   spacing: Tuple[float, ...], order: int,
+                   mask_fn=None):
     p, p_prev, r, r_prev = state
     dt = jnp.asarray(dt, p.dtype)
-    h0_p, hz_p = rotated_laplacians(p, params, spacing, order)
-    h0_r, hz_r = rotated_laplacians(r, params, spacing, order)
+    h0_p, hz_p = rotated_laplacians(p, params, spacing, order,
+                                    mask_fn=mask_fn)
+    h0_r, hz_r = rotated_laplacians(r, params, spacing, order,
+                                    mask_fn=mask_fn)
     e_fac = 1.0 + 2.0 * params.epsilon
     d_fac = jnp.sqrt(1.0 + 2.0 * params.delta)
     den = params.m + params.damp * dt

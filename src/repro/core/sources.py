@@ -24,6 +24,22 @@ receiver is a local, grid-aligned operation.
 Everything here is host-side numpy precomputation producing jnp constants;
 it runs once per model setup, which is the paper's "negligible overhead"
 claim — benchmarked in `benchmarks/overhead_precompute.py`.
+
+Paper-artifact map (the same table lives in DESIGN.md §2):
+
+    paper artifact                   implementing function
+    -------------------------------  -------------------------------------
+    Listing 1  (naive propagate)     core/propagators/*.propagate
+    Listing 2  (affected points)     affected_points[_by_injection]
+    Listing 3  (wavelet decompose)   precompute  (-> GriddedSources.src_dcmp)
+    Listing 4  (fused injection)     inject / dense_increment
+    Listing 5  (z-compressed loop)   z_compress / inject_zcompressed
+    Listing 6  (time-tiled loop)     kernels/ops._tb_propagate + stencil_tb
+    Fig. 5b/5c SM / SID              GriddedSources.sm / .sid
+    Fig. 5d    src_dcmp              GriddedSources.src_dcmp
+    Fig. 6     nnz_mask / Sp_SID     ZCompressed
+    Fig. 3b    receiver interp       interpolate / tile_receiver_tables
+    Fig. 4b    halo-source dep       tile_source_tables(include_halo=True)
 """
 from __future__ import annotations
 

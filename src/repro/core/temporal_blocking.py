@@ -180,3 +180,94 @@ def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
     if best is None:
         raise ValueError("no plan fits the VMEM budget")
     return best, log
+
+
+# ---------------------------------------------------------------------------
+# Per-physics pricing (paper §III: the payoff scales with field count)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PhysicsCost:
+    """Static per-physics quantities the TB cost model needs.
+
+    state_fields:  carried wavefields (VMEM windows, written back by TB).
+    param_fields:  read-only model windows (DMA'd, never written).
+    evolved_fields: fields freshly computed per step — what a naive
+                   spatially-blocked step writes to HBM (1 acoustic,
+                   2 TTI, 9 elastic).
+    radius_mult:   per-step halo growth in units of order//2 — 1 for the
+                   acoustic Laplacian; 2 for elastic (stress reads the new
+                   velocities) and TTI (two first-derivative passes).
+    flops_per_point: order -> useful FLOPs per grid-point-timestep, taken
+                   from the matching propagator's `model_flops_per_step`.
+
+    These counts mirror `kernels.tb_physics.PHYSICS` (kept numeric here so
+    core never imports kernels); a cross-check test in
+    tests/test_tb_cost_model.py guards against drift.
+    """
+
+    name: str
+    state_fields: int
+    param_fields: int
+    evolved_fields: int
+    radius_mult: int
+    flops_per_point: Callable[[int], float]
+
+    @property
+    def fields(self) -> int:
+        """VMEM-resident windows: every state+param field plus one scratch
+        (the acoustic value 5 = u0, u1, m, damp, scratch is the historical
+        default of `autotune_plan`)."""
+        return self.state_fields + self.param_fields + 1
+
+    @property
+    def read_fields(self) -> int:
+        return self.state_fields + self.param_fields
+
+    @property
+    def write_fields(self) -> int:
+        return self.state_fields
+
+    def step_radius(self, order: int) -> int:
+        return self.radius_mult * (order // 2)
+
+
+def _flops(propagator: str):
+    def f(order: int) -> float:
+        from repro.core.propagators import acoustic, elastic, tti
+        mod = {"acoustic": acoustic, "elastic": elastic, "tti": tti}
+        return float(mod[propagator].model_flops_per_step((1, 1, 1), order))
+    return f
+
+
+PHYSICS_COSTS = {
+    "acoustic": PhysicsCost("acoustic", state_fields=2, param_fields=2,
+                            evolved_fields=1, radius_mult=1,
+                            flops_per_point=_flops("acoustic")),
+    "tti": PhysicsCost("tti", state_fields=4, param_fields=6,
+                       evolved_fields=2, radius_mult=2,
+                       flops_per_point=_flops("tti")),
+    "elastic": PhysicsCost("elastic", state_fields=9, param_fields=4,
+                           evolved_fields=9, radius_mult=2,
+                           flops_per_point=_flops("elastic")),
+}
+
+
+def plan_for_physics(physics: str, nz: int, order: int, **kwargs
+                     ) -> Tuple[TBPlan, dict]:
+    """Autotune a (tile, T) plan priced for a specific physics.
+
+    Fills `autotune_plan`'s field counts, per-step halo radius and FLOP
+    density from `PHYSICS_COSTS[physics]`; kwargs (vmem_budget, tiles,
+    depths, peak_flops, hbm_bw, ...) pass through and override.  The
+    acoustic entry reproduces the historical defaults, and T=1 remains in
+    the sweep so physics/order combinations where the trapezoid's overlap
+    growth beats the traffic savings (the paper's SO-12 result) fall back
+    to the spatially-blocked schedule.
+    """
+    pc = PHYSICS_COSTS[physics]
+    args = dict(fields=pc.fields, read_fields=pc.read_fields,
+                write_fields=pc.write_fields,
+                flops_per_point=pc.flops_per_point(order))
+    args.update(kwargs)
+    return autotune_plan(nz, pc.step_radius(order), **args)

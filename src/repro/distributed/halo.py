@@ -28,14 +28,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.4.38 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.core import sources as src_mod
 from repro.core import stencil as st
+
+
+def _axis_size(axis_name: str) -> int:
+    if hasattr(jax.lax, "axis_size"):  # jax >= 0.4.38
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)  # classic static-size idiom
 
 
 def _shift_from_low(x, h: int, axis_name: str, dim: int):
     """Every device sends its LAST h slices to the next device (axis order);
     device 0's halo comes back as zeros (Dirichlet)."""
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     sl = [slice(None)] * x.ndim
     sl[dim] = slice(x.shape[dim] - h, None)
     piece = x[tuple(sl)]
@@ -46,7 +57,7 @@ def _shift_from_low(x, h: int, axis_name: str, dim: int):
 
 
 def _shift_from_high(x, h: int, axis_name: str, dim: int):
-    n = jax.lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     sl = [slice(None)] * x.ndim
     sl[dim] = slice(0, h)
     piece = x[tuple(sl)]
@@ -162,7 +173,7 @@ def distributed_propagate(setup: DistAcoustic, nt: int, u0, u1, m, damp,
 
     # static per-shard fields, halo-padded once (they are time-invariant)
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(spec, spec),
         out_specs=(spec, spec))
     def prepare(m_l, damp_l):
@@ -183,7 +194,7 @@ def distributed_propagate(setup: DistAcoustic, nt: int, u0, u1, m, damp,
         src_dcmp = jnp.zeros((nt, 1), m.dtype)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(spec, spec, spec),
         out_specs=(spec, spec, spec))
     def prepare_src(sm_l, sid_l, scale_l):
@@ -195,7 +206,7 @@ def distributed_propagate(setup: DistAcoustic, nt: int, u0, u1, m, damp,
         return sm_p, sid_p, scale_p
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(spec, spec, spec, spec, spec, spec, spec, P(None, None)),
         out_specs=(spec, spec))
     def tile(u0_l, u1_l, m_p, damp_p, scale_p, sm_p, sid_p, src_tile):

@@ -1,15 +1,20 @@
 """jit'd drivers for the Pallas kernels.
 
-`acoustic_tb_propagate` is the production entry point: the outer time-tile
-loop of the paper's Listing 6 (scan over depth-T time tiles, one
-`pallas_call` each), with the per-tile source/receiver tables precomputed
-once from the paper's grid-aligned structures.  `acoustic_sb_propagate`
-(T = 1) is the spatially-blocked baseline the paper compares against.
+`acoustic_tb_propagate` / `tti_tb_propagate` / `elastic_tb_propagate` are
+the production entry points: the outer time-tile loop of the paper's
+Listing 6 (scan over depth-T time tiles, one `pallas_call` each), with the
+per-tile source/receiver tables precomputed once from the paper's
+grid-aligned structures.  All three share one physics-agnostic driver
+(`_tb_propagate`) parameterized by a `tb_physics.TBPhysics` step spec —
+the paper's point that the enabling transformation is independent of the
+propagator.  `acoustic_sb_propagate` (T = 1) is the spatially-blocked
+baseline the paper compares against.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,6 +23,7 @@ import numpy as np
 from repro.core import sources as src_mod
 from repro.core.temporal_blocking import TBPlan
 from repro.kernels import stencil_tb as ker
+from repro.kernels import tb_physics as phys
 
 
 def _pad_xy(a: jnp.ndarray, h: int, mode: str) -> jnp.ndarray:
@@ -33,16 +39,21 @@ def _dummy_tables(ntiles: int, T: int):
 def build_tables(spec: ker.TBKernelSpec,
                  g: Optional[src_mod.GriddedSources],
                  receivers: Optional[src_mod.GriddedReceivers],
-                 m: jnp.ndarray):
+                 params: Dict[str, jnp.ndarray],
+                 physics: phys.TBPhysics = phys.ACOUSTIC):
     """Host-side precompute of the per-tile tables (paper §II.A, TPU layout).
 
-    Returns (src_tab | None, rec_tab | None, static caps actually used).
+    `params` maps physics.param_fields names to the (unpadded) model arrays;
+    the physics supplies the per-point injection factor (dt^2/m for
+    acoustic/TTI, dt for the elastic explosive source).
+
+    Returns (src_tab | None, rec_tab | None).
     """
     shape = (spec.nx, spec.ny, spec.nz)
     src_tab = rec_tab = None
     if g is not None:
-        scale = np.asarray((spec.dt ** 2)
-                           / src_mod.point_scale(m, g))  # dt^2 / m at points
+        scale = np.asarray(physics.inject_scale(params, g, spec.dt),
+                           np.float32)
         src_tab = src_mod.tile_source_tables(g, shape, spec.tile, spec.halo,
                                              scale=scale,
                                              include_halo=spec.T > 1)
@@ -63,17 +74,18 @@ def _src_vals_for_tile(g: src_mod.GriddedSources, src_tab, t0, T: int):
 
 
 def _combine_rec_partials(rec_part: jnp.ndarray, rec_tab, nrec: int):
-    """(ntx, nty, T, capr) partials -> (T, nrec) samples (segment sum)."""
-    ntx, nty, T, capr = rec_part.shape
+    """(ntx, nty, T, capr, nchan) partials -> (T, nrec, nchan) samples
+    (segment sum over receiver ids; paper Fig. 3b gather)."""
+    ntx, nty, T, capr, nchan = rec_part.shape
     ids = jnp.where(rec_tab.rid < 0, nrec, rec_tab.rid).reshape(-1)
-    vals = rec_part.reshape(ntx * nty, T, capr)
-    vals = jnp.transpose(vals, (0, 2, 1)).reshape(-1, T)   # (tiles*capr, T)
+    vals = rec_part.reshape(ntx * nty, T, capr, nchan)
+    vals = jnp.transpose(vals, (0, 2, 1, 3)).reshape(-1, T, nchan)
     seg = jax.ops.segment_sum(vals, ids, num_segments=nrec + 1)
-    return seg[:nrec].T                                    # (T, nrec)
+    return jnp.transpose(seg[:nrec], (1, 0, 2))            # (T, nrec, nchan)
 
 
-def _run_time_tile(spec: ker.TBKernelSpec, u0, u1, m_pad, damp_pad,
-                   g, src_tab, rec_tab, t0, nrec: int,
+def _run_time_tile(spec: ker.TBKernelSpec, physics: phys.TBPhysics,
+                   state, param_pads, g, src_tab, rec_tab, t0, nrec: int,
                    interpret: bool):
     h = spec.halo
     ntx, nty = spec.ntiles
@@ -91,94 +103,100 @@ def _run_time_tile(spec: ker.TBKernelSpec, u0, u1, m_pad, damp_pad,
         r_w = jnp.zeros((ntiles, 1), jnp.float32)
     r_w = r_w.astype(spec.dtype)
 
-    u0n, u1n, rec_part = ker.acoustic_tb_time_tile(
-        spec, _pad_xy(u0, h, "constant"), _pad_xy(u1, h, "constant"),
-        m_pad, damp_pad, s_coords, s_vals, r_coords, r_w,
-        interpret=interpret)
+    state_pads = tuple(_pad_xy(f, h, "constant") for f in state)
+    new_state, rec_part = ker.tb_time_tile(
+        spec, physics, state_pads, param_pads, s_coords, s_vals, r_coords,
+        r_w, interpret=interpret)
     if rec_tab is not None:
         rec = _combine_rec_partials(rec_part, rec_tab, nrec)
     else:
-        rec = jnp.zeros((spec.T, 0), spec.dtype)
-    return u0n, u1n, rec
+        rec = jnp.zeros((spec.T, 0, physics.rec_channels), spec.dtype)
+    return new_state, rec
 
 
 def make_spec(shape: Tuple[int, int, int], plan: TBPlan, order: int,
               dt: float, spacing: Tuple[float, float, float],
-              src_cap: int, rec_cap: int,
-              dtype=jnp.float32) -> ker.TBKernelSpec:
+              src_cap: int, rec_cap: int, dtype=jnp.float32,
+              physics: phys.TBPhysics = phys.ACOUSTIC) -> ker.TBKernelSpec:
     return ker.TBKernelSpec(
         nx=shape[0], ny=shape[1], nz=shape[2], tile=plan.tile, T=plan.T,
         order=order, dt=float(dt), spacing=tuple(float(s) for s in spacing),
-        src_cap=src_cap, rec_cap=rec_cap, dtype=dtype)
+        src_cap=src_cap, rec_cap=rec_cap, dtype=dtype,
+        step_radius=physics.step_radius(order),
+        rec_channels=physics.rec_channels)
 
 
-def acoustic_tb_propagate(nt: int, u0, u1, m, damp,
-                          g: Optional[src_mod.GriddedSources],
-                          receivers: Optional[src_mod.GriddedReceivers],
-                          plan: TBPlan, order: int, dt,
-                          spacing: Tuple[float, float, float],
-                          interpret: bool = True):
-    """Propagate nt acoustic timesteps with the temporally-blocked kernel.
+def _tb_propagate(physics: phys.TBPhysics, nt: int,
+                  state: Tuple[jnp.ndarray, ...],
+                  params: Dict[str, jnp.ndarray],
+                  g: Optional[src_mod.GriddedSources],
+                  receivers: Optional[src_mod.GriddedReceivers],
+                  plan: TBPlan, order: int, dt,
+                  spacing: Tuple[float, float, float],
+                  interpret: bool = True):
+    """Propagate nt timesteps of `physics` with the temporally-blocked kernel.
 
-    Semantics identical to `kernels.ref.acoustic_reference` (tested):
-    trapezoidal time tiles of depth plan.T, remainder tile of depth nt % T.
+    Semantics identical to the reference propagator in `core/propagators/`
+    (tested): trapezoidal time tiles of depth plan.T, remainder tile of
+    depth nt % T.  `state` is ordered as physics.state_fields; `params`
+    maps physics.param_fields to (nx, ny, nz) arrays.
 
     Host-side orchestration (table precompute) happens eagerly; each time
     tile is one `pallas_call` under `lax.scan`.
 
-    Returns ((u_prev, u), rec (nt, nrec) | None).
+    Returns (final state tuple, rec (nt, nrec, rec_channels) | None).
     """
-    shape = u1.shape
-    dtype = u1.dtype
+    shape = state[0].shape
+    dtype = state[0].dtype
     dt = float(dt)
     if g is not None and g.nt < nt:
         raise ValueError(f"source wavelets cover {g.nt} steps < nt={nt}")
-    src_cap = 1
-    rec_cap = 1
-    spec = make_spec(shape, plan, order, dt, spacing, src_cap, rec_cap,
-                     dtype=dtype)
-    # caps depend on the actual tables; rebuild spec with true caps
-    src_tab, rec_tab = build_tables(spec, g, receivers, m)
-    if src_tab is not None:
-        src_cap = src_tab.cap
-    if rec_tab is not None:
-        rec_cap = rec_tab.coords.shape[1]
-    spec = make_spec(shape, plan, order, dt, spacing, src_cap, rec_cap,
-                     dtype=dtype)
+
+    def specced(src_cap, rec_cap, T=plan.T):
+        p = dataclasses.replace(plan, T=T)
+        return make_spec(shape, p, order, dt, spacing, src_cap, rec_cap,
+                         dtype=dtype, physics=physics)
+
+    # tables depend only on tile/halo/dt (not the caps), so build them once
+    # and size the spec's static caps from what came back
+    spec = specced(1, 1)
+    src_tab, rec_tab = build_tables(spec, g, receivers, params, physics)
+    src_cap = src_tab.cap if src_tab is not None else 1
+    rec_cap = rec_tab.coords.shape[1] if rec_tab is not None else 1
+    spec = specced(src_cap, rec_cap)
 
     h = spec.halo
-    m_pad = _pad_xy(m, h, "edge")
-    damp_pad = _pad_xy(damp, h, "edge")
+    param_pads = tuple(_pad_xy(params[f], h, "edge")
+                       for f in physics.param_fields)
     nrec = receivers.num if receivers is not None else 0
 
     n_main = nt // spec.T
     rem = nt - n_main * spec.T
 
     def tile_body(carry, tile_idx):
-        u0c, u1c = carry
         t0 = tile_idx * spec.T
-        u0n, u1n, rec = _run_time_tile(spec, u0c, u1c, m_pad, damp_pad,
-                                       g, src_tab, rec_tab, t0, nrec,
-                                       interpret)
-        return (u0n, u1n), rec
+        new, rec = _run_time_tile(spec, physics, carry, param_pads, g,
+                                  src_tab, rec_tab, t0, nrec, interpret)
+        return new, rec
 
-    carry = (u0, u1)
+    carry = tuple(state)
     recs_main = None
     if n_main > 0:
         carry, recs_main = jax.lax.scan(tile_body, carry,
                                         jnp.arange(n_main))
-        recs_main = recs_main.reshape(n_main * spec.T, -1)
+        recs_main = recs_main.reshape(n_main * spec.T, -1,
+                                      physics.rec_channels)
 
     if rem > 0:
-        rspec = dataclasses_replace(spec, T=rem)
+        rspec = specced(src_cap, rec_cap, T=rem)
         # remainder tables must be rebuilt: halo depth changes with T
-        rsrc_tab, rrec_tab = build_tables(rspec, g, receivers, m)
-        rm_pad = _pad_xy(m, rspec.halo, "edge")
-        rdamp_pad = _pad_xy(damp, rspec.halo, "edge")
-        u0n, u1n, rec_rem = _run_time_tile(
-            rspec, carry[0], carry[1], rm_pad, rdamp_pad, g, rsrc_tab,
-            rrec_tab, jnp.asarray(n_main * spec.T), nrec, interpret)
-        carry = (u0n, u1n)
+        rsrc_tab, rrec_tab = build_tables(rspec, g, receivers, params,
+                                          physics)
+        rparam_pads = tuple(_pad_xy(params[f], rspec.halo, "edge")
+                            for f in physics.param_fields)
+        carry, rec_rem = _run_time_tile(
+            rspec, physics, carry, rparam_pads, g, rsrc_tab, rrec_tab,
+            jnp.asarray(n_main * spec.T), nrec, interpret)
         recs = (jnp.concatenate([recs_main, rec_rem], axis=0)
                 if recs_main is not None else rec_rem)
     else:
@@ -189,9 +207,64 @@ def acoustic_tb_propagate(nt: int, u0, u1, m, damp,
     return carry, recs
 
 
-def dataclasses_replace(spec: ker.TBKernelSpec, **kw) -> ker.TBKernelSpec:
-    import dataclasses
-    return dataclasses.replace(spec, **kw)
+# ---------------------------------------------------------------------------
+# Physics entry points
+# ---------------------------------------------------------------------------
+
+def acoustic_tb_propagate(nt: int, u0, u1, m, damp,
+                          g: Optional[src_mod.GriddedSources],
+                          receivers: Optional[src_mod.GriddedReceivers],
+                          plan: TBPlan, order: int, dt,
+                          spacing: Tuple[float, float, float],
+                          interpret: bool = True):
+    """Acoustic TB propagation.  Returns ((u_prev, u), rec (nt, nrec) | None).
+
+    Semantics identical to `kernels.ref.acoustic_reference` (tested)."""
+    (u0n, u1n), recs = _tb_propagate(
+        phys.ACOUSTIC, nt, (u0, u1), {"m": m, "damp": damp}, g, receivers,
+        plan, order, dt, spacing, interpret=interpret)
+    if recs is not None:
+        recs = recs[..., 0]
+    return (u0n, u1n), recs
+
+
+def tti_tb_propagate(nt: int, state, params, g, receivers,
+                     plan: TBPlan, order: int, dt,
+                     spacing: Tuple[float, float, float],
+                     interpret: bool = True):
+    """TTI TB propagation.
+
+    `state` is a `propagators.tti.TTIState`; `params` a `TTIParams`.
+    Returns (TTIState, rec (nt, nrec) | None) matching
+    `kernels.ref.tti_reference` (tested)."""
+    from repro.core.propagators import tti as tt
+    st_tuple = tuple(getattr(state, f) for f in phys.TTI.state_fields)
+    pdict = {f: getattr(params, f) for f in phys.TTI.param_fields}
+    final, recs = _tb_propagate(phys.TTI, nt, st_tuple, pdict, g, receivers,
+                                plan, order, dt, spacing, interpret=interpret)
+    if recs is not None:
+        recs = recs[..., 0]
+    return tt.TTIState(**dict(zip(phys.TTI.state_fields, final))), recs
+
+
+def elastic_tb_propagate(nt: int, state, params, g, receivers,
+                         plan: TBPlan, order: int, dt,
+                         spacing: Tuple[float, float, float],
+                         interpret: bool = True):
+    """Elastic TB propagation.
+
+    `state` is a `propagators.elastic.ElasticState`; `params` an
+    `ElasticParams`.  Returns (ElasticState, rec (nt, nrec, 2) | None) —
+    channels are (vz, pressure proxy), matching
+    `kernels.ref.elastic_reference` (tested)."""
+    from repro.core.propagators import elastic as el
+    st_tuple = tuple(getattr(state, f) for f in phys.ELASTIC.state_fields)
+    pdict = {f: getattr(params, f) for f in phys.ELASTIC.param_fields}
+    final, recs = _tb_propagate(phys.ELASTIC, nt, st_tuple, pdict, g,
+                                receivers, plan, order, dt, spacing,
+                                interpret=interpret)
+    return el.ElasticState(**dict(zip(phys.ELASTIC.state_fields, final))), \
+        recs
 
 
 def acoustic_sb_propagate(nt: int, u0, u1, m, damp, g, receivers,

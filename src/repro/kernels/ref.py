@@ -1,9 +1,10 @@
 """Pure-jnp oracles for the Pallas kernels.
 
-The acoustic oracle is exactly the Listing-1 reference driver from
-`repro.core.propagators.acoustic` — naive full-grid timestepping with
-grid-aligned injection and receiver interpolation.  The kernels must match
-it to float32 tolerance for every (shape, order, T, tile) combination.
+The wave-propagation oracles are exactly the Listing-1-style reference
+drivers from `repro.core.propagators` — naive full-grid timestepping with
+grid-aligned injection and receiver interpolation, one per physics
+(acoustic, TTI, elastic).  The temporally-blocked kernels must match them
+to float32 tolerance for every (shape, order, T, tile) combination.
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import sources as src_mod
 from repro.core.grid import Grid
-from repro.core.propagators import acoustic
+from repro.core.propagators import acoustic, elastic, tti
 
 
 def acoustic_reference(nt: int, u0: jnp.ndarray, u1: jnp.ndarray,
@@ -31,6 +32,32 @@ def acoustic_reference(nt: int, u0: jnp.ndarray, u1: jnp.ndarray,
     final, recs = acoustic.propagate(nt, state, params, g, dt, grid, order,
                                      receivers=receivers)
     return (final.u_prev, final.u), recs
+
+
+def tti_reference(nt: int, state, params, dt: float,
+                  spacing: Tuple[float, ...], order: int,
+                  g: Optional[src_mod.GriddedSources] = None,
+                  receivers: Optional[src_mod.GriddedReceivers] = None):
+    """Run nt TTI steps from a `tti.TTIState` with `tti.TTIParams`.
+
+    Returns (TTIState after nt steps, rec (nt, nrec) or None)."""
+    grid = Grid(shape=state.p.shape, spacing=spacing)
+    return tti.propagate(nt, state, params, g, dt, grid, order,
+                         receivers=receivers)
+
+
+def elastic_reference(nt: int, state, params, dt: float,
+                      spacing: Tuple[float, ...], order: int,
+                      g: Optional[src_mod.GriddedSources] = None,
+                      receivers: Optional[src_mod.GriddedReceivers] = None):
+    """Run nt elastic steps from an `elastic.ElasticState` with
+    `elastic.ElasticParams`.
+
+    Returns (ElasticState after nt steps, rec (nt, nrec, 2) or None) —
+    receiver channels are (vz, pressure proxy)."""
+    grid = Grid(shape=state.vx.shape, spacing=spacing)
+    return elastic.propagate(nt, state, params, g, dt, grid, order,
+                             receivers=receivers)
 
 
 def ssd_chunked_reference(x, a, b, c, chunk: int = None):

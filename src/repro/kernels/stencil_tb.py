@@ -1,35 +1,46 @@
-"""Pallas TPU kernel: temporally-blocked acoustic stencil with fused
-grid-aligned source injection and receiver interpolation.
+"""Pallas TPU kernel: multi-field temporally-blocked stencil driver with
+fused grid-aligned source injection and receiver interpolation.
 
-This is the TPU-native realization of the paper's scheme (DESIGN.md §2):
+This is the TPU-native realization of the paper's scheme (DESIGN.md §2),
+generalized over physics: the same trapezoidal VMEM schedule advances the
+isotropic acoustic (1 evolved field), TTI pseudo-acoustic (coupled p/r) and
+isotropic elastic (9-field velocity-stress) propagators — the paper's full
+§III evaluation matrix.  Everything physics-specific is a
+`tb_physics.TBPhysics` step spec; this module owns only the schedule:
 
 - The paper makes temporal blocking *legal* by aligning sparse off-the-grid
   operators to the grid (SM/SID/src_dcmp).  We consume exactly those
   structures, re-laid-out as per-(x,y)-tile tables
   (`sources.tile_source_tables`).
 - The paper's wavefront schedule exploited Xeon L3 residency; here a spatial
-  tile plus a `T*r`-deep halo is DMA'd HBM->VMEM once, advanced `T`
-  timesteps entirely in VMEM (trapezoidal/overlapped time tiling), with the
-  injection applied at each in-VMEM step, and only the valid centre written
-  back.  HBM traffic drops ~T-fold at the cost of redundant rim compute
-  (`TBPlan.overlap_factor`).
+  tile plus a `T*r_step`-deep halo is DMA'd HBM->VMEM once (one window per
+  state/param field), advanced `T` timesteps entirely in VMEM
+  (trapezoidal/overlapped time tiling), with the injection applied to the
+  physics' inject fields at each in-VMEM step, and only the valid centre
+  written back.  HBM traffic drops ~T-fold at the cost of redundant rim
+  compute (`TBPlan.overlap_factor`).  `r_step` is the per-step halo
+  consumption — order//2 for the acoustic Laplacian, order for elastic and
+  TTI whose step chains two derivative passes (DESIGN.md §2).
 
 Kernel layout
   grid = (ntx, nty) spatial tiles; one `pallas_call` per *time tile* of
   depth T (the outer `t_tile` loop of the paper's Listing 6 lives in
-  `ops.acoustic_tb_propagate`).
+  `ops._tb_propagate`).
 
-  inputs (ANY/HBM, manually DMA'd):   u0, u1, m, damp — padded by H = T*r
+  inputs (ANY/HBM, manually DMA'd):   state fields then param fields,
+                                      each padded by H = T*r_step
   inputs (blocked, small):            per-tile source/receiver tables
-  outputs (blocked):                  u0', u1' centre regions; receiver
-                                      partials (ntx, nty, T, capr)
+  outputs (blocked):                  per-state-field centre regions;
+                                      receiver partials
+                                      (ntx, nty, T, capr, rec_channels)
 
 TPU notes: the z (minor) dimension is kept whole and should be a multiple
 of 128; tiles (tx, ty) should be multiples of 8.  Scatter/gather of the
 sparse points is realized with broadcasted-iota masks (predicated vector
 ops — the VPU-friendly analogue of the paper's z-column nnz loop, see
-DESIGN.md §2 table).  Validated in interpret mode on CPU; `cost` metadata
-below feeds the roofline model.
+DESIGN.md §2 table).  Validated in interpret mode on CPU
+(tests/test_kernel_stencil_tb.py, tests/test_kernel_multiphysics.py);
+`kernel_cost` metadata below feeds the roofline model.
 """
 from __future__ import annotations
 
@@ -44,6 +55,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from repro.core import stencil as st
+from repro.kernels import tb_physics as phys
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,6 +73,8 @@ class TBKernelSpec:
     src_cap: int                # max sources per tile (padded)
     rec_cap: int                # max receiver gather entries per tile
     dtype: jnp.dtype = jnp.float32
+    step_radius: Optional[int] = None   # per-step halo; None -> order // 2
+    rec_channels: int = 1
 
     @property
     def radius(self) -> int:
@@ -68,7 +82,8 @@ class TBKernelSpec:
 
     @property
     def halo(self) -> int:
-        return self.T * self.radius
+        r = self.radius if self.step_radius is None else self.step_radius
+        return self.T * r
 
     @property
     def window(self) -> Tuple[int, int, int]:
@@ -83,10 +98,11 @@ class TBKernelSpec:
                 f"grid ({self.nx},{self.ny}) must divide by tile {self.tile}")
         return (self.nx // tx, self.ny // ty)
 
-    def vmem_bytes(self) -> int:
+    def vmem_bytes(self, nwindows: int = 4) -> int:
+        """Resident bytes of `nwindows` window-sized VMEM buffers (one per
+        state/param field; 4 = the acoustic kernel's u_a, u_b, m, damp)."""
         wx, wy, wz = self.window
-        # u_a, u_b, m, damp windows resident
-        return wx * wy * wz * jnp.dtype(self.dtype).itemsize * 4
+        return wx * wy * wz * jnp.dtype(self.dtype).itemsize * nwindows
 
 
 def _domain_mask(spec: TBKernelSpec, ti, tj):
@@ -110,49 +126,57 @@ def _point_mask(shape, x, y, z):
     return (ix == x) & (iy == y) & (iz == z)
 
 
-def _tb_kernel(spec: TBKernelSpec,
-               # inputs
-               u0_hbm, u1_hbm, m_hbm, damp_hbm,
-               src_coords_ref, src_vals_ref,
-               rec_coords_ref, rec_w_ref,
-               # outputs
-               u0_out_ref, u1_out_ref, rec_out_ref,
-               # scratch
-               ua, ub, mw, dampw, sems):
+def _tb_kernel(spec: TBKernelSpec, physics: phys.TBPhysics, *refs):
+    """Generic multi-field TB kernel body.
+
+    Ref layout (positional, in pallas_call order):
+      inputs:  n_state + n_param HBM refs, then src_coords, src_vals,
+               rec_coords, rec_w
+      outputs: n_state centre refs, then rec partials
+      scratch: n_state + n_param VMEM windows, then a DMA semaphore array
+    """
+    ns = len(physics.state_fields)
+    nw = physics.num_windows
+    hbm = refs[:nw]
+    src_coords_ref, src_vals_ref, rec_coords_ref, rec_w_ref = refs[nw:nw + 4]
+    out_refs = refs[nw + 4:nw + 4 + ns]
+    rec_out_ref = refs[nw + 4 + ns]
+    wins = refs[nw + 5 + ns:nw + 5 + ns + nw]
+    sems = refs[nw + 5 + ns + nw]
+
     ti = pl.program_id(0)
     tj = pl.program_id(1)
     tx, ty = spec.tile
     wx, wy, wz = spec.window
     h = spec.halo
 
-    # ---- DMA the four windows HBM -> VMEM ---------------------------------
+    # ---- DMA one window per field HBM -> VMEM ------------------------------
     def win(ref):
         return ref.at[pl.ds(ti * tx, wx), pl.ds(tj * ty, wy), :]
 
-    copies = [pltpu.make_async_copy(win(u0_hbm), ua, sems.at[0]),
-              pltpu.make_async_copy(win(u1_hbm), ub, sems.at[1]),
-              pltpu.make_async_copy(win(m_hbm), mw, sems.at[2]),
-              pltpu.make_async_copy(win(damp_hbm), dampw, sems.at[3])]
+    copies = [pltpu.make_async_copy(win(hbm[i]), wins[i], sems.at[i])
+              for i in range(nw)]
     for c in copies:
         c.start()
     for c in copies:
         c.wait()
 
     dom = _domain_mask(spec, ti, tj)
-    m = mw[...]
-    damp = dampw[...]
-    dt_c = jnp.asarray(spec.dt, spec.dtype)
-    den = m + damp * dt_c
+    mask_fn = lambda a: a * dom  # noqa: E731
 
-    u_prev = ua[...]
-    u = ub[...]
+    state = {f: wins[i][...] for i, f in enumerate(physics.state_fields)}
+    params = {f: wins[ns + i][...]
+              for i, f in enumerate(physics.param_fields)}
 
     # ---- T in-VMEM timesteps (static unroll; T is small) -------------------
     for k in range(spec.T):
-        lap = st.laplacian(u, spec.spacing, spec.order)
-        u_next = (dt_c * dt_c * lap + m * (2.0 * u - u_prev)
-                  + damp * dt_c * u) / den
-        u_next = u_next * dom  # Dirichlet outside the physical domain
+        new = physics.update(state, params, spec, mask_fn)
+        # Dirichlet outside the physical domain for the freshly computed
+        # fields (carried prev-copies and update-premasked fields are
+        # already masked)
+        for f in physics.evolved_fields:
+            if f not in physics.premasked_fields:
+                new[f] = new[f] * dom
 
         # fused grid-aligned source injection (paper Listing 4/5 -> masked
         # vector adds; padding slots carry val = 0)
@@ -162,95 +186,124 @@ def _tb_kernel(spec: TBKernelSpec,
             z = src_coords_ref[0, p, 2]
             val = src_vals_ref[0, k, p]
             mask = _point_mask((wx, wy, wz), x, y, z)
-            u_next = u_next + jnp.where(mask, val, 0.0).astype(u_next.dtype)
+            add = jnp.where(mask, val, 0.0)
+            for f in physics.inject_fields:
+                new[f] = new[f] + add.astype(new[f].dtype)
 
         # fused receiver interpolation partials (paper Fig. 3b)
+        rec_arrays = physics.record(new)
         for p in range(spec.rec_cap):
             x = rec_coords_ref[0, p, 0]
             y = rec_coords_ref[0, p, 1]
             z = rec_coords_ref[0, p, 2]
             w = rec_w_ref[0, p]
             mask = _point_mask((wx, wy, wz), x, y, z)
-            sample = jnp.sum(jnp.where(mask, u_next, 0.0))
-            rec_out_ref[0, 0, k, p] = (w * sample).astype(spec.dtype)
+            for c, arr in enumerate(rec_arrays):
+                sample = jnp.sum(jnp.where(mask, arr, 0.0))
+                rec_out_ref[0, 0, k, p, c] = (w * sample).astype(spec.dtype)
 
-        u_prev, u = u, u_next
+        state = new
 
     # ---- write back the valid centre ---------------------------------------
-    u0_out_ref[...] = u_prev[h:h + tx, h:h + ty, :]
-    u1_out_ref[...] = u[h:h + tx, h:h + ty, :]
+    for i, f in enumerate(physics.state_fields):
+        out_refs[i][...] = state[f][h:h + tx, h:h + ty, :]
+
+
+def tb_time_tile(spec: TBKernelSpec, physics: phys.TBPhysics,
+                 state_pads, param_pads,
+                 src_coords, src_vals, rec_coords, rec_w,
+                 *, interpret: bool = True):
+    """One depth-T time tile over the whole grid (one pallas_call).
+
+    Args:
+      state_pads: one (nx + 2H, ny + 2H, nz) array per physics.state_fields
+                  (zero-padded).
+      param_pads: one padded array per physics.param_fields (edge-padded).
+      src_coords: (ntiles, cap, 3) window-local int32.
+      src_vals:   (ntiles, T, cap) f32, scale folded in, 0 on padding.
+      rec_coords: (ntiles, capr, 3); rec_w: (ntiles, capr).
+    Returns (new_states tuple, rec_partials) with fields (nx, ny, nz) and
+    rec_partials (ntx, nty, T, capr, rec_channels).
+    """
+    ns = len(physics.state_fields)
+    nw = physics.num_windows
+    ntx, nty = spec.ntiles
+    wx, wy, wz = spec.window
+    kern = functools.partial(_tb_kernel, spec, physics)
+    flat = lambda i, j: (i * nty + j, 0, 0)  # noqa: E731
+
+    field_out_spec = pl.BlockSpec((spec.tile[0], spec.tile[1], spec.nz),
+                                  lambda i, j: (i, j, 0))
+    field_out_shape = jax.ShapeDtypeStruct((spec.nx, spec.ny, spec.nz),
+                                           spec.dtype)
+    outs = pl.pallas_call(
+        kern,
+        grid=(ntx, nty),
+        in_specs=(
+            [pl.BlockSpec(memory_space=pl.ANY)] * nw
+            + [pl.BlockSpec((1, spec.src_cap, 3), flat),
+               pl.BlockSpec((1, spec.T, spec.src_cap), flat),
+               pl.BlockSpec((1, spec.rec_cap, 3), flat),
+               pl.BlockSpec((1, spec.rec_cap), lambda i, j: (i * nty + j, 0))]
+        ),
+        out_specs=(
+            [field_out_spec] * ns
+            + [pl.BlockSpec((1, 1, spec.T, spec.rec_cap, spec.rec_channels),
+                            lambda i, j: (i, j, 0, 0, 0))]
+        ),
+        out_shape=(
+            [field_out_shape] * ns
+            + [jax.ShapeDtypeStruct(
+                (ntx, nty, spec.T, spec.rec_cap, spec.rec_channels),
+                spec.dtype)]
+        ),
+        scratch_shapes=(
+            [pltpu.VMEM((wx, wy, wz), spec.dtype)] * nw
+            + [pltpu.SemaphoreType.DMA((nw,))]
+        ),
+        interpret=interpret,
+    )(*state_pads, *param_pads, src_coords, src_vals, rec_coords, rec_w)
+    return tuple(outs[:ns]), outs[ns]
 
 
 def acoustic_tb_time_tile(spec: TBKernelSpec, u0_pad, u1_pad, m_pad, damp_pad,
                           src_coords, src_vals, rec_coords, rec_w,
                           *, interpret: bool = True):
-    """One depth-T time tile over the whole grid (one pallas_call).
+    """Acoustic wrapper kept for compatibility: returns
+    (u0', u1', rec_partials (ntx, nty, T, capr))."""
+    (u0n, u1n), rec = tb_time_tile(
+        spec, phys.ACOUSTIC, (u0_pad, u1_pad), (m_pad, damp_pad),
+        src_coords, src_vals, rec_coords, rec_w, interpret=interpret)
+    return u0n, u1n, rec[..., 0]
 
-    Args:
-      u0_pad..damp_pad: (nx + 2H, ny + 2H, nz) padded fields.
-      src_coords: (ntiles, cap, 3) window-local int32.
-      src_vals:   (ntiles, T, cap) f32, scale folded in, 0 on padding.
-      rec_coords: (ntiles, capr, 3); rec_w: (ntiles, capr).
-    Returns (u0', u1', rec_partials) with fields (nx, ny, nz) and
-    rec_partials (ntx, nty, T, capr).
+
+def kernel_cost(spec: TBKernelSpec,
+                physics: phys.TBPhysics = phys.ACOUSTIC) -> dict:
+    """Analytic per-call cost of the kernel (feeds §Roofline / benchmarks).
+
+    Reads one window per state+param field, writes back the centre of every
+    state field; sparse-term flops are the masked vector adds of the fused
+    injection/interpolation.
     """
     ntx, nty = spec.ntiles
     wx, wy, wz = spec.window
-    tspec = functools.partial(_tb_kernel, spec)
-    flat = lambda i, j: (i * nty + j, 0, 0)  # noqa: E731
-
-    return pl.pallas_call(
-        tspec,
-        grid=(ntx, nty),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # u0
-            pl.BlockSpec(memory_space=pl.ANY),  # u1
-            pl.BlockSpec(memory_space=pl.ANY),  # m
-            pl.BlockSpec(memory_space=pl.ANY),  # damp
-            pl.BlockSpec((1, spec.src_cap, 3), flat),
-            pl.BlockSpec((1, spec.T, spec.src_cap), flat),
-            pl.BlockSpec((1, spec.rec_cap, 3), flat),
-            pl.BlockSpec((1, spec.rec_cap), lambda i, j: (i * nty + j, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((spec.tile[0], spec.tile[1], spec.nz),
-                         lambda i, j: (i, j, 0)),
-            pl.BlockSpec((spec.tile[0], spec.tile[1], spec.nz),
-                         lambda i, j: (i, j, 0)),
-            pl.BlockSpec((1, 1, spec.T, spec.rec_cap),
-                         lambda i, j: (i, j, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((spec.nx, spec.ny, spec.nz), spec.dtype),
-            jax.ShapeDtypeStruct((spec.nx, spec.ny, spec.nz), spec.dtype),
-            jax.ShapeDtypeStruct((ntx, nty, spec.T, spec.rec_cap),
-                                 spec.dtype),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((wx, wy, wz), spec.dtype),
-            pltpu.VMEM((wx, wy, wz), spec.dtype),
-            pltpu.VMEM((wx, wy, wz), spec.dtype),
-            pltpu.VMEM((wx, wy, wz), spec.dtype),
-            pltpu.SemaphoreType.DMA((4,)),
-        ],
-        interpret=interpret,
-    )(u0_pad, u1_pad, m_pad, damp_pad, src_coords, src_vals, rec_coords,
-      rec_w)
-
-
-def kernel_cost(spec: TBKernelSpec) -> dict:
-    """Analytic per-call cost of the kernel (feeds §Roofline / benchmarks)."""
-    ntx, nty = spec.ntiles
-    wx, wy, wz = spec.window
-    lap_flops = st.stencil_flops_per_point(spec.order, 3) + 9
+    if physics.name == "acoustic":
+        stencil_flops = st.stencil_flops_per_point(spec.order, 3) + 9
+    else:
+        from repro.core.propagators import elastic, tti
+        mod = {"elastic": elastic, "tti": tti}[physics.name]
+        stencil_flops = mod.model_flops_per_step((1, 1, 1), spec.order)
     window_pts = wx * wy * wz
-    sparse_flops = (spec.src_cap + 2 * spec.rec_cap) * window_pts
-    flops = ntx * nty * spec.T * (window_pts * lap_flops + sparse_flops)
+    sparse_flops = (len(physics.inject_fields) * spec.src_cap
+                    + 2 * physics.rec_channels * spec.rec_cap) * window_pts
+    flops = ntx * nty * spec.T * (window_pts * stencil_flops + sparse_flops)
     itemsize = jnp.dtype(spec.dtype).itemsize
-    hbm_read = ntx * nty * window_pts * 4 * itemsize
-    hbm_write = spec.nx * spec.ny * spec.nz * 2 * itemsize
+    nw = physics.num_windows
+    ns = len(physics.state_fields)
+    hbm_read = ntx * nty * window_pts * nw * itemsize
+    hbm_write = spec.nx * spec.ny * spec.nz * ns * itemsize
     return {"flops": float(flops),
             "hbm_bytes": float(hbm_read + hbm_write),
             "useful_flops": float(spec.nx * spec.ny * spec.nz * spec.T
-                                  * lap_flops),
-            "vmem_bytes": spec.vmem_bytes()}
+                                  * stencil_flops),
+            "vmem_bytes": spec.vmem_bytes(nw)}

@@ -1,0 +1,180 @@
+"""Per-physics step specs for the multi-field temporally-blocked kernel.
+
+The paper's claim (§III) is that grid-aligning sparse off-the-grid sources
+makes temporal blocking legal for *every* propagator of industrial interest
+— isotropic acoustic, anisotropic (TTI) acoustic, and isotropic elastic —
+because the enabling transformation touches only the source/receiver terms,
+not the stencil.  This module encodes that separation for the TPU kernel
+(DESIGN.md §2): the trapezoidal in-VMEM schedule, halo DMA, fused injection
+and receiver partials live in the physics-agnostic driver
+(`stencil_tb.tb_time_tile`), while everything physics-specific is a
+:class:`TBPhysics` value:
+
+  state_fields   per-window wavefields carried across in-VMEM steps and
+                 written back (2 for acoustic, 4 for TTI, 9 for elastic)
+  param_fields   read-only model windows (m/damp, Thomsen+angles, Lame)
+  inject_fields  state fields receiving the fused grid-aligned injection
+  rec_channels   number of per-receiver sample channels
+  radius_mult    per-step halo growth in units of order//2 — 1 for the
+                 acoustic Laplacian, 2 for elastic (stress reads the *new*
+                 velocities: two staggered-derivative applications per
+                 step) and TTI (rotated Laplacian = two first-derivative
+                 passes); halo depth is T * radius_mult * order//2
+  update         one in-VMEM timestep on window-shaped arrays
+  record         fields sampled at receiver points (after injection)
+  inject_scale   host-side per-affected-point injection factor
+
+The update functions call the *same* `stencil_update` used by the reference
+propagators in `core/propagators/` — the only addition is the domain mask
+hook (`mask_fn`) that re-zeroes intermediate fields on the window's
+out-of-domain rim, reproducing on a tile window the zero padding the
+reference applies at the physical boundary.  Parity is enforced in
+interpret mode by `tests/test_kernel_multiphysics.py`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sources as src_mod
+from repro.core import stencil as st
+from repro.core.propagators import elastic as el
+from repro.core.propagators import tti as tt
+
+
+@dataclasses.dataclass(frozen=True)
+class TBPhysics:
+    """Everything the generic TB driver needs to advance one physics."""
+
+    name: str
+    state_fields: Tuple[str, ...]
+    param_fields: Tuple[str, ...]
+    # state fields actually *computed* each step (the rest are carried
+    # copies of previous time levels — already masked, never re-masked,
+    # and the fields a naive spatially-blocked step writes to HBM)
+    evolved_fields: Tuple[str, ...]
+    inject_fields: Tuple[str, ...]
+    rec_channels: int
+    radius_mult: int
+    # update(state, params, spec, mask_fn) -> new state (same keys)
+    update: Callable[[Dict, Dict, object, Callable], Dict]
+    # record(state) -> rec_channels window-shaped arrays
+    record: Callable[[Dict], Tuple]
+    # inject_scale(params, g, dt) -> (npts,) per-point injection factor
+    inject_scale: Callable[[Dict, src_mod.GriddedSources, float], np.ndarray]
+    # evolved fields the update already domain-masked itself (via mask_fn);
+    # the driver skips its own mask for these to avoid a redundant multiply
+    premasked_fields: Tuple[str, ...] = ()
+
+    @property
+    def num_windows(self) -> int:
+        return len(self.state_fields) + len(self.param_fields)
+
+    def step_radius(self, order: int) -> int:
+        """Per-in-VMEM-step halo consumption (grid points per side)."""
+        return self.radius_mult * (order // 2)
+
+
+# ---------------------------------------------------------------------------
+# Acoustic (paper §III.A): 2nd order in time, single field
+# ---------------------------------------------------------------------------
+
+def _acoustic_update(state, params, spec, mask_fn):
+    u, u_prev = state["u"], state["u_prev"]
+    dt = jnp.asarray(spec.dt, u.dtype)
+    lap = st.laplacian(u, spec.spacing, spec.order)
+    num = dt * dt * lap + params["m"] * (2.0 * u - u_prev) \
+        + params["damp"] * dt * u
+    u_next = num / (params["m"] + params["damp"] * dt)
+    return {"u": u_next, "u_prev": u}
+
+
+def _acoustic_scale(params, g, dt):
+    return np.asarray((dt ** 2) / src_mod.point_scale(params["m"], g))
+
+
+ACOUSTIC = TBPhysics(
+    name="acoustic",
+    state_fields=("u_prev", "u"),
+    param_fields=("m", "damp"),
+    evolved_fields=("u",),
+    inject_fields=("u",),
+    rec_channels=1,
+    radius_mult=1,
+    update=_acoustic_update,
+    record=lambda s: (s["u"],),
+    inject_scale=_acoustic_scale,
+)
+
+
+# ---------------------------------------------------------------------------
+# TTI pseudo-acoustic (paper §III.B): coupled p/r, rotated Laplacian
+# ---------------------------------------------------------------------------
+
+_TTI_PARAMS = ("m", "damp", "epsilon", "delta", "theta", "phi")
+
+
+def _tti_update(state, params, spec, mask_fn):
+    tst = tt.TTIState(p=state["p"], p_prev=state["p_prev"],
+                      r=state["r"], r_prev=state["r_prev"])
+    tpar = tt.TTIParams(**{k: params[k] for k in _TTI_PARAMS})
+    p_next, r_next = tt.stencil_update(tst, tpar, spec.dt, spec.spacing,
+                                       spec.order, mask_fn=mask_fn)
+    return {"p": p_next, "p_prev": state["p"],
+            "r": r_next, "r_prev": state["r"]}
+
+
+TTI = TBPhysics(
+    name="tti",
+    state_fields=("p", "p_prev", "r", "r_prev"),
+    param_fields=_TTI_PARAMS,
+    evolved_fields=("p", "r"),
+    inject_fields=("p", "r"),
+    rec_channels=1,
+    radius_mult=2,   # rotated Laplacian: two first-derivative passes
+    update=_tti_update,
+    record=lambda s: (s["p"],),
+    inject_scale=_acoustic_scale,   # same dt^2/m factor as acoustic
+)
+
+
+# ---------------------------------------------------------------------------
+# Isotropic elastic (paper §III.C): 9-field velocity-stress, staggered
+# ---------------------------------------------------------------------------
+
+_EL_STATE = ("vx", "vy", "vz", "txx", "tyy", "tzz", "txy", "txz", "tyz")
+_EL_PARAMS = ("lam", "mu", "b", "damp")
+
+
+def _elastic_update(state, params, spec, mask_fn):
+    est = el.ElasticState(**{k: state[k] for k in _EL_STATE})
+    epar = el.ElasticParams(**{k: params[k] for k in _EL_PARAMS})
+    nxt = el.stencil_update(est, epar, spec.dt, spec.spacing, spec.order,
+                            mask_fn=mask_fn)
+    return dict(zip(_EL_STATE, nxt))
+
+
+def _elastic_scale(params, g, dt):
+    # Explosive source: wavelet * dt into the diagonal stresses.
+    return np.full((g.npts,), float(dt), np.float32)
+
+
+ELASTIC = TBPhysics(
+    name="elastic",
+    state_fields=_EL_STATE,
+    param_fields=_EL_PARAMS,
+    evolved_fields=_EL_STATE,   # 1st order in time: every field is new
+    inject_fields=("txx", "tyy", "tzz"),
+    rec_channels=2,  # vz and the pressure proxy -(txx+tyy+tzz)/3
+    radius_mult=2,   # stress update reads the *new* velocities
+    update=_elastic_update,
+    record=lambda s: (s["vz"], -(s["txx"] + s["tyy"] + s["tzz"]) / 3.0),
+    inject_scale=_elastic_scale,
+    premasked_fields=("vx", "vy", "vz"),  # stencil_update masks mid-step
+)
+
+
+PHYSICS = {p.name: p for p in (ACOUSTIC, TTI, ELASTIC)}

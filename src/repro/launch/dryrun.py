@@ -327,6 +327,8 @@ def main():
                 print(f"[{'multi' if mp else 'single'}] {arch} x {shape}: "
                       f"{status}{extra}", flush=True)
                 if args.out:
+                    outdir = os.path.dirname(os.path.abspath(args.out))
+                    os.makedirs(outdir, exist_ok=True)
                     with open(args.out, "w") as f:
                         json.dump(results, f, indent=1)
                 if status == "ok":

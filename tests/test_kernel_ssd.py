@@ -5,7 +5,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypothesis_stub import given, hst, settings
 
 from repro.kernels import ref
 from repro.kernels.ssd_scan import SSDSpec, kernel_cost, ssd_scan

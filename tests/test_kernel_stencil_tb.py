@@ -8,7 +8,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as hst
+from _hypothesis_stub import given, hst, settings
 
 from repro.core import boundary, sources as S
 from repro.core.grid import Grid

@@ -1,0 +1,164 @@
+"""TB cost-model invariants: `TBPlan` analytics and the per-physics
+autotuner (`plan_for_physics` / `PHYSICS_COSTS`).
+
+The analytic model is what stands in for the paper's Table-I autotuning
+sweep on TPU, so its qualitative behaviour is contract: temporal blocking
+must save HBM traffic, the trapezoid's redundant-rim overlap must grow
+with T and shrink with tile size, and when overlap growth beats the
+traffic savings (the paper's SO-12 result) the sweep must fall back to
+T = 1.
+"""
+import math
+
+import pytest
+
+from repro.core.temporal_blocking import (PHYSICS_COSTS, TBPlan,
+                                          autotune_plan, plan_for_physics)
+
+
+# ---------------------------------------------------------------------------
+# TBPlan invariants
+# ---------------------------------------------------------------------------
+
+def test_overlap_factor_is_one_without_blocking():
+    assert TBPlan((32, 32), T=1, radius=0).overlap_factor() == 1.0
+    # T=1 still reads a halo but computes the window once; overlap > 1
+    assert TBPlan((32, 32), T=1, radius=2).overlap_factor() > 1.0
+
+
+def test_overlap_factor_monotone_in_T_and_tile():
+    base = TBPlan((32, 32), T=2, radius=2).overlap_factor()
+    deeper = TBPlan((32, 32), T=8, radius=2).overlap_factor()
+    bigger = TBPlan((128, 128), T=2, radius=2).overlap_factor()
+    assert deeper > base        # more redundant rim per step
+    assert bigger < base        # amortized over a larger centre
+    assert base > 1.0
+
+
+def test_overlap_factor_closed_form():
+    """overlap = sum_k prod_d (tile + 2(T-k)r) / (T * prod_d tile)."""
+    plan = TBPlan((16, 8), T=3, radius=2)
+    expect = sum((16 + 2 * (3 - k) * 2) * (8 + 2 * (3 - k) * 2)
+                 for k in range(3)) / (3 * 16 * 8)
+    assert math.isclose(plan.overlap_factor(), expect)
+
+
+def test_vmem_bytes_scales_with_fields_and_window():
+    plan = TBPlan((32, 32), T=4, radius=2)
+    nz = 128
+    one = plan.vmem_bytes(nz, fields=1)
+    wx, wy, wz = plan.window(nz)
+    assert one == wx * wy * wz * 4
+    assert plan.vmem_bytes(nz, fields=13) == 13 * one  # elastic windows
+    assert plan.vmem_bytes(nz, fields=5, dtype_bytes=2) == one * 5 // 2
+
+
+def test_hbm_traffic_drops_with_T():
+    """The whole point of temporal blocking: bytes/point-step falls ~T-fold
+    (minus the halo re-read) for tiles comfortably larger than the halo."""
+    nz = 128
+    t1 = TBPlan((64, 64), T=1, radius=2).hbm_bytes_per_point_step(nz)
+    t8 = TBPlan((64, 64), T=8, radius=2).hbm_bytes_per_point_step(nz)
+    assert t8 < t1 / 4
+    # and the naive (no-halo) lower bound is never beaten
+    naive = (4 + 1) * 4.0 / 8  # read+write fields over T=8
+    assert t8 > naive
+
+
+def test_hbm_traffic_counts_fields():
+    nz = 64
+    plan = TBPlan((32, 32), T=2, radius=2)
+    a = plan.hbm_bytes_per_point_step(nz, read_fields=4, write_fields=2)
+    b = plan.hbm_bytes_per_point_step(nz, read_fields=13, write_fields=9)
+    assert b > 2 * a  # elastic moves >2x the acoustic bytes
+
+
+# ---------------------------------------------------------------------------
+# Autotuner
+# ---------------------------------------------------------------------------
+
+def test_autotune_respects_vmem_budget():
+    plan, log = autotune_plan(nz=128, radius=2, vmem_budget=8 * 2 ** 20)
+    assert plan.vmem_bytes(128, 5) <= 8 * 2 ** 20
+    assert all(TBPlan(t[:2], t[2], 2).vmem_bytes(128, 5) <= 8 * 2 ** 20
+               for t in log)
+
+
+def test_autotune_rejects_impossible_budget():
+    with pytest.raises(ValueError):
+        autotune_plan(nz=4096, radius=8, vmem_budget=2 ** 10)
+
+
+def test_autotune_falls_back_to_T1_when_compute_bound():
+    """The paper's SO-12 result: when the kernel is compute-bound, any
+    T > 1 only adds redundant rim flops, so the sweep returns T = 1."""
+    plan, _ = autotune_plan(nz=512, radius=12, flops_per_point=1e5)
+    assert plan.T == 1
+
+
+def test_autotune_blocks_when_memory_bound():
+    plan, _ = autotune_plan(nz=512, radius=2, flops_per_point=40.0)
+    assert plan.T > 1
+
+
+# ---------------------------------------------------------------------------
+# Per-physics pricing
+# ---------------------------------------------------------------------------
+
+def test_physics_costs_registry():
+    ac, ti, el = (PHYSICS_COSTS[k] for k in ("acoustic", "tti", "elastic"))
+    # acoustic reproduces the historical autotune_plan defaults
+    assert (ac.fields, ac.read_fields) == (5, 4)
+    # field counts: state + params
+    assert (ti.state_fields, ti.param_fields) == (4, 6)
+    assert (el.state_fields, el.param_fields) == (9, 4)
+    # elastic/TTI consume double halo per step
+    for order in (4, 8):
+        assert ac.step_radius(order) == order // 2
+        assert ti.step_radius(order) == order
+        assert el.step_radius(order) == order
+    # flop density ordering: TTI's rotated Laplacian is the most
+    # compute-heavy, acoustic the lightest (paper §III.B)
+    assert ti.flops_per_point(8) > el.flops_per_point(8) \
+        > ac.flops_per_point(8)
+
+
+def test_plan_for_physics_acoustic_matches_defaults():
+    """Acoustic pricing must collapse to the plain autotune_plan call the
+    benchmarks have always made (same radius/fields/flops)."""
+    ac = PHYSICS_COSTS["acoustic"]
+    got, _ = plan_for_physics("acoustic", nz=512, order=4)
+    want, _ = autotune_plan(nz=512, radius=2,
+                            flops_per_point=ac.flops_per_point(4),
+                            fields=5, read_fields=4, write_fields=2)
+    assert got == want
+
+
+def test_plan_for_physics_high_order_falls_back():
+    """Fig. 9 ordering: at SO-12 the heavy physics autotune back to the
+    spatially-blocked schedule (T = 1), while memory-bound acoustic at
+    SO-4 keeps a deep time tile."""
+    assert plan_for_physics("tti", nz=512, order=12)[0].T == 1
+    assert plan_for_physics("elastic", nz=512, order=12)[0].T == 1
+    assert plan_for_physics("acoustic", nz=512, order=4)[0].T > 1
+
+
+def test_physics_costs_match_kernel_specs():
+    """PHYSICS_COSTS keeps numeric copies of the kernel step specs so core
+    never imports kernels — guard the two registries against drift."""
+    from repro.kernels import tb_physics as phys
+    for name, pc in PHYSICS_COSTS.items():
+        tp = phys.PHYSICS[name]
+        assert pc.state_fields == len(tp.state_fields)
+        assert pc.param_fields == len(tp.param_fields)
+        assert pc.evolved_fields == len(tp.evolved_fields)
+        assert pc.radius_mult == tp.radius_mult
+        for order in (2, 4, 8, 12):
+            assert pc.step_radius(order) == tp.step_radius(order)
+    assert set(PHYSICS_COSTS) == set(phys.PHYSICS)
+
+
+def test_plan_for_physics_kwargs_override():
+    plan, _ = plan_for_physics("elastic", nz=128, order=4, depths=(1, 2),
+                               tiles=(32,))
+    assert plan.tile == (32, 32) and plan.T in (1, 2)
