@@ -1,0 +1,151 @@
+"""Fig. 12 (repo extension): weak/strong scaling of the sharded TB layer.
+
+The paper stops at one node; DESIGN.md §4 argues the trapezoid trade
+composes with domain decomposition (one depth-H exchange per depth-T
+tile).  This benchmark measures it: the sharded multi-physics driver
+(`distributed/halo.py`) over forced host devices, weak scaling (fixed
+per-device block) and strong scaling (fixed global grid), acoustic by
+default.
+
+XLA pins the device count at first init, so each device count runs in a
+subprocess of this same module (``--child``); the parent aggregates into
+``results/BENCH_dist.json`` — the perf trajectory future PRs regress
+against — and prints the usual CSV rows.
+
+    PYTHONPATH=src:. python benchmarks/fig12_scaling.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+
+
+def _child(ndev: int, mode: str, physics: str, n_base: int, nt: int, T: int,
+           order: int):
+    """Measure one (ndev, mode) cell; prints a single JSON line."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from benchmarks.common import time_fn
+    from repro.core import boundary, sources as S
+    from repro.core.grid import Grid
+    from repro.distributed.halo import DistTBPlan, sharded_tb_propagate
+    from repro.kernels import tb_physics as phys
+    from repro.launch import mesh as mesh_lib
+    import jax
+
+    ndev_real = len(jax.devices())
+    assert ndev_real == ndev, (ndev_real, ndev)
+    mesh = mesh_lib.make_xy_mesh()
+    px, py = mesh.shape["data"], mesh.shape["model"]
+    # weak: fixed per-device block -> grid grows with the mesh;
+    # strong: fixed global grid -> blocks shrink as devices are added
+    if mode == "weak":
+        shape = (n_base * px, n_base * py, n_base)
+    else:
+        shape = (n_base, n_base, n_base)
+    grid = Grid(shape=shape, spacing=(10.0,) * 3)
+    rng = np.random.RandomState(0)
+    vp = np.full(shape, 2000.0)
+    m = jnp.asarray(1.0 / vp ** 2, jnp.float32)
+    damp = boundary.damping_field(shape, nbl=3, spacing=grid.spacing)
+    dt = grid.cfl_dt(2000.0, order)
+    src = S.SparseOperator(
+        5.0 + rng.rand(2, 3) * (np.asarray(grid.extent) - 10.0))
+    g = S.precompute(src, grid, S.ricker_wavelet(nt, dt, f0=12.0, num=2))
+    u0 = jnp.zeros(shape, jnp.float32)
+    u1 = jnp.zeros(shape, jnp.float32)
+
+    plan = DistTBPlan(mesh=mesh, grid_shape=shape,
+                      physics=phys.PHYSICS[physics], order=order, T=T,
+                      dt=dt, spacing=grid.spacing)
+
+    # jit once so the timed iterations measure propagation, not re-tracing
+    # (the driver is jit-compatible in state/params; tables hang off `g`)
+    @jax.jit
+    def run(a, b, mm, dd):
+        (a, b), _ = sharded_tb_propagate(plan, nt, (a, b),
+                                         {"m": mm, "damp": dd}, g)
+        return b
+
+    sec = time_fn(run, u0, u1, m, damp, warmup=1, iters=3)
+    pts = float(np.prod(shape)) * nt
+    print(json.dumps({
+        "ndev": ndev, "mode": mode, "physics": physics,
+        "grid": list(shape), "nt": nt, "T": T, "order": order,
+        "seconds": sec, "mpoints_per_s": pts / sec / 1e6,
+        "halo": plan.halo, "block": list(plan.block)}))
+
+
+def run(ndevs=(1, 2, 4, 8), out: str = None, fast: bool = False,
+        physics: str = "acoustic"):
+    """Spawn one subprocess per device count; aggregate + emit."""
+    from benchmarks.common import emit
+
+    if fast:
+        ndevs = tuple(d for d in ndevs if d <= 2)
+    n_base, nt, T, order = (16, 4, 2, 4) if fast else (32, 8, 2, 4)
+    out = out or os.path.join(REPO, "results", "BENCH_dist.json")
+    records = []
+    for mode in ("weak", "strong"):
+        for ndev in ndevs:
+            env = {**os.environ,
+                   "XLA_FLAGS": f"--xla_force_host_platform_device_count"
+                                f"={ndev}"}
+            env["PYTHONPATH"] = os.pathsep.join(
+                p for p in (os.path.join(REPO, "src"), REPO,
+                            env.get("PYTHONPATH")) if p)
+            r = subprocess.run(
+                [sys.executable, "-m", "benchmarks.fig12_scaling",
+                 "--child", "--ndev", str(ndev), "--mode", mode,
+                 "--physics", physics, "--n", str(n_base), "--nt", str(nt),
+                 "--T", str(T), "--order", str(order)],
+                cwd=REPO, env=env, capture_output=True, text=True,
+                timeout=1800)
+            if r.returncode != 0:
+                print(f"# fig12 {mode} ndev={ndev} FAILED:\n"
+                      + r.stderr[-1500:], file=sys.stderr)
+                raise RuntimeError(f"fig12 child failed ({mode}, {ndev})")
+            rec = json.loads(r.stdout.strip().splitlines()[-1])
+            records.append(rec)
+            emit(f"fig12_{mode}_ndev{ndev}", rec["seconds"] * 1e6,
+                 f"{rec['mpoints_per_s']:.3f} Mpts/s grid="
+                 f"{'x'.join(map(str, rec['grid']))}")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {out} ({len(records)} cells)")
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", action="store_true")
+    ap.add_argument("--ndev", type=int, default=1)
+    ap.add_argument("--mode", default="weak", choices=("weak", "strong"))
+    ap.add_argument("--physics", default="acoustic")
+    ap.add_argument("--n", type=int, default=32)
+    ap.add_argument("--nt", type=int, default=8)
+    ap.add_argument("--T", type=int, default=2)
+    ap.add_argument("--order", type=int, default=4)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.child:
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={args.ndev}")
+        _child(args.ndev, args.mode, args.physics, args.n, args.nt, args.T,
+               args.order)
+    else:
+        run(out=args.out, fast=args.fast, physics=args.physics)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,8 +16,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig9_speedup, fig10_sources, fig11_roofline,
-                            lm_roofline, overhead_precompute,
-                            table1_autotune)
+                            fig12_scaling, lm_roofline,
+                            overhead_precompute, table1_autotune)
 
     sections = [
         ("fig9 (TB vs spatial-blocked speedup)",
@@ -28,6 +28,8 @@ def main() -> None:
         ("overhead (precompute cost, paper §I.C)",
          lambda: overhead_precompute.run(n=24, nt=4)),
         ("lm_roofline (§Roofline table from dry-run)", lm_roofline.run),
+        ("fig12 (sharded TB weak/strong scaling -> BENCH_dist.json)",
+         lambda: fig12_scaling.run(fast=args.fast)),
     ]
     failed = 0
     for title, fn in sections:

@@ -11,7 +11,10 @@ Three layers:
    Pallas kernel and the distributed deep-halo exchange exploit.
 3. Analytical HBM-traffic/overlap models for the trapezoidal VMEM schedule —
    the TPU replacement for the paper's cache-aware roofline reasoning, used
-   by the autotuner (`benchmarks/table1_autotune.py`) and §Roofline.
+   by the autotuner (`benchmarks/table1_autotune.py`) and §Roofline — plus
+   the interconnect term of the sharded outer trapezoid (exchange bytes and
+   latency per depth-T tile, DESIGN.md §4), which makes `plan_for_physics`
+   mesh-aware via `mesh_block`/`link_bw`/`link_latency`.
 """
 from __future__ import annotations
 
@@ -139,6 +142,34 @@ class TBPlan:
         write = tx * ty * nz * write_fields * dtype_bytes
         return (read + write) / (tx * ty * nz * self.T)
 
+    # --- interconnect terms (the outer trapezoid of DESIGN.md §4) -----------
+
+    def exchange_bytes_per_tile(self, block: Tuple[int, int], nz: int,
+                                fields: int = 1,
+                                dtype_bytes: int = 4) -> int:
+        """Bytes a shard with local block (bx, by) sends per depth-T time
+        tile: the x exchange moves two (H, by, nz) strips, the y exchange
+        two (bx + 2H, H, nz) strips of the already-x-padded block (corners
+        ride the second hop), per exchanged field."""
+        bx, by = block
+        h = self.halo
+        return 2 * h * nz * (by + bx + 2 * h) * fields * dtype_bytes
+
+    def exchange_seconds_per_point_step(self, block: Tuple[int, int],
+                                        nz: int, fields: int,
+                                        link_bw: float,
+                                        link_latency: float,
+                                        dtype_bytes: int = 4) -> float:
+        """Interconnect time per grid-point-timestep of one shard: one deep
+        exchange (4 ppermute shifts per field: 2 axes x 2 directions)
+        amortized over the T steps it buys — the multi-chip analogue of
+        `hbm_bytes_per_point_step`.  Deeper T trades a linear growth in rim
+        bytes against a 1/T drop in per-exchange latency."""
+        bx, by = block
+        byts = self.exchange_bytes_per_tile(block, nz, fields, dtype_bytes)
+        coll = 4 * fields * link_latency
+        return (byts / link_bw + coll) / (bx * by * nz * self.T)
+
 
 def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
                   tiles=(16, 32, 64, 128, 256), depths=(1, 2, 4, 8, 16),
@@ -146,20 +177,37 @@ def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
                   flops_per_point: float = 40.0,
                   read_fields: int = None, write_fields: int = None,
                   peak_flops: float = 197e12, hbm_bw: float = 819e9,
+                  mesh_block: Tuple[int, int] = None,
+                  link_bw: float = 45e9, link_latency: float = 1.5e-6,
+                  exchange_fields: int = None,
                   ) -> Tuple[TBPlan, dict]:
     """Pick (tile, T) minimizing modeled time/point-step under the VMEM cap —
     the TPU collapse of the paper's Table-I autotuning sweep.
 
-    time/point-step = max(compute, memory):
-      compute = overlap_factor * flops_per_point / peak_flops
-      memory  = hbm_bytes_per_point_step / hbm_bw
+    time/point-step = max(compute, memory[, interconnect]):
+      compute      = overlap_factor * flops_per_point / peak_flops
+      memory       = hbm_bytes_per_point_step / hbm_bw
+      interconnect = exchange_seconds_per_point_step (only when `mesh_block`
+                     is given: the sharded schedule's one depth-H exchange
+                     per tile over per-device blocks of (bx, by) — plans
+                     whose halo or tile exceed the block are infeasible)
 
     T=1 (no temporal blocking) is in the sweep, so kernels where TB cannot
     win (high space order: overlap growth beats traffic savings — the
     paper's SO-12 result) autotune back to the spatially-blocked schedule.
+    With `mesh_block`, a latency-dominated interconnect pushes toward deep
+    T (fewer exchanges) while a bandwidth-starved one pushes back to
+    shallow T (the rim bytes grow with the exchange depth) — the
+    multi-chip analogue of the same trade.
+
+    `exchange_fields` (default `write_fields`) is how many state fields
+    cross the link per exchange; `link_bw`/`link_latency` default to one
+    ICI link (~45 GB/s).
     """
     read_fields = fields - 1 if read_fields is None else read_fields
     write_fields = 1 if write_fields is None else write_fields
+    exchange_fields = (write_fields if exchange_fields is None
+                       else exchange_fields)
     best, best_cost, log = None, math.inf, {}
     for tx in tiles:
         for ty in tiles:
@@ -167,18 +215,31 @@ def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
                 plan = TBPlan((tx, ty), T, radius)
                 if plan.vmem_bytes(nz, fields, dtype_bytes) > vmem_budget:
                     continue
+                if mesh_block is not None and (
+                        plan.halo > min(mesh_block)
+                        or tx > mesh_block[0] or ty > mesh_block[1]):
+                    continue  # infeasible on the per-device block
                 comp = plan.overlap_factor() * flops_per_point / peak_flops
                 mem = plan.hbm_bytes_per_point_step(
                     nz, read_fields=read_fields, write_fields=write_fields,
                     dtype_bytes=dtype_bytes) / hbm_bw
+                entry = {"compute_s": comp, "memory_s": mem,
+                         "overlap": plan.overlap_factor()}
                 cost = max(comp, mem)
-                log[(tx, ty, T)] = {"compute_s": comp, "memory_s": mem,
-                                    "cost_s": cost,
-                                    "overlap": plan.overlap_factor()}
+                if mesh_block is not None:
+                    comm = plan.exchange_seconds_per_point_step(
+                        mesh_block, nz, exchange_fields, link_bw,
+                        link_latency, dtype_bytes=dtype_bytes)
+                    entry["comm_s"] = comm
+                    cost = max(cost, comm)
+                entry["cost_s"] = cost
+                log[(tx, ty, T)] = entry
                 if cost < best_cost:
                     best, best_cost = plan, cost
     if best is None:
-        raise ValueError("no plan fits the VMEM budget")
+        raise ValueError("no plan fits the VMEM budget"
+                         + ("" if mesh_block is None
+                            else " and per-device block"))
     return best, log
 
 
@@ -259,15 +320,23 @@ def plan_for_physics(physics: str, nz: int, order: int, **kwargs
 
     Fills `autotune_plan`'s field counts, per-step halo radius and FLOP
     density from `PHYSICS_COSTS[physics]`; kwargs (vmem_budget, tiles,
-    depths, peak_flops, hbm_bw, ...) pass through and override.  The
-    acoustic entry reproduces the historical defaults, and T=1 remains in
-    the sweep so physics/order combinations where the trapezoid's overlap
-    growth beats the traffic savings (the paper's SO-12 result) fall back
-    to the spatially-blocked schedule.
+    depths, peak_flops, hbm_bw, mesh_block, link_bw, link_latency, ...)
+    pass through and override.  The acoustic entry reproduces the
+    historical defaults, and T=1 remains in the sweep so physics/order
+    combinations where the trapezoid's overlap growth beats the traffic
+    savings (the paper's SO-12 result) fall back to the spatially-blocked
+    schedule.
+
+    Passing `mesh_block=(bx, by)` (the per-device block of the sharded
+    layer in `distributed/halo.py`) makes the sweep mesh-aware: the
+    interconnect term prices the one depth-`T*r` exchange per tile with
+    this physics' state-field count (what actually crosses the link), and
+    plans that don't fit the block are dropped.
     """
     pc = PHYSICS_COSTS[physics]
     args = dict(fields=pc.fields, read_fields=pc.read_fields,
                 write_fields=pc.write_fields,
+                exchange_fields=pc.state_fields,
                 flops_per_point=pc.flops_per_point(order))
     args.update(kwargs)
     return autotune_plan(nz, pc.step_radius(order), **args)

@@ -1,32 +1,53 @@
-"""Distributed wave propagation: domain decomposition + deep-halo exchange.
+"""Sharded multi-physics temporally-blocked execution layer (DESIGN.md §4).
 
 The paper's enabling transformation (grid-aligned sources) composes directly
 with distribution: after alignment, injection is a *local* operation on
 whichever shard owns (or halos) the affected points, so a time tile of depth
-T needs exactly ONE neighbor exchange of depth H = T*r — temporal blocking
-applied to communication (DESIGN.md §4).  Redundant rim compute on each
-device buys a T-fold reduction in exchange count, the multi-chip analogue
-of the VMEM trapezoid in `kernels/stencil_tb.py`.
+T needs exactly ONE neighbor exchange of depth H = T*r_step — temporal
+blocking applied to communication.  Redundant rim compute on each device
+buys a T-fold reduction in exchange count, the multi-chip analogue of the
+VMEM trapezoid in `kernels/stencil_tb.py`; the two trapezoids nest:
 
-Mesh layout: grid x -> "data" axis, grid y -> "model" axis (and x also over
-"pod" when present, folded into "data" by the caller).  Exchanges are
+    outer trapezoid   shard block + depth-H exchanged halo, advanced T steps
+                      between `lax.ppermute` rounds (this module)
+    inner trapezoid   the per-shard schedule — either the Pallas TB kernel
+                      (`stencil_tb.tb_time_tile`, `inner="pallas"`) tiling
+                      the shard block, or its jnp oracle (`inner="jnp"`,
+                      the same `tb_physics.TBPhysics.update` the kernel
+                      unrolls, on the whole exchanged block)
+
+Everything physics-specific comes from the *same* `tb_physics.TBPhysics`
+step specs that `kernels/ops._tb_propagate` uses, so one driver advances
+acoustic (2 state fields), TTI (4) and elastic (9) — there is no
+per-physics distributed stencil loop to keep in sync.
+
+Source/receiver handling is the paper's §II machinery sharded by owner:
+`sources.tile_source_tables` / `tile_receiver_tables` with tile = the shard
+block bin every affected point (sources duplicated into any window whose
+halo contains them, paper Fig. 4b) and every receiver gather entry into the
+owning shard; each shard records *partial* per-step receiver samples which
+the driver segment-sums by receiver id (`ops.combine_rec_partials`) — so
+receiver traces are per-step at any T, and `nt % T != 0` runs a shallower
+remainder tile exactly like the single-device driver.
+
+Mesh layout: grid x -> "data" axis, grid y -> "model" axis.  Exchanges are
 `lax.ppermute` shifts; missing neighbors (domain boundary) produce zeros =
-the Dirichlet convention shared by the reference and the Pallas kernel.
+the Dirichlet convention shared by the reference and the Pallas kernel, and
+out-of-domain cells are re-masked every in-block step (param fields carry
+their physics' `param_fills` there so updates stay finite).
 
 Overlap note: within a time tile the first local step only needs the halo
-for its outermost r cells; XLA's latency-hiding scheduler can overlap the
-ppermute with interior compute.  The collective schedule is inspected in
-EXPERIMENTS.md §Dry-run.
+for its outermost r_step cells; XLA's latency-hiding scheduler can overlap
+the ppermute with interior compute.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 try:  # jax >= 0.4.38 exposes shard_map at the top level
     _shard_map = jax.shard_map
@@ -34,7 +55,8 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.core import sources as src_mod
-from repro.core import stencil as st
+from repro.kernels import ops as ops_mod
+from repro.kernels import tb_physics as phys
 
 
 def _axis_size(axis_name: str) -> int:
@@ -81,29 +103,68 @@ def halo_exchange_2d(x, h: int, ax_x: str, ax_y: str):
     return halo_exchange(x, h, ax_y, 1)
 
 
-class DistAcoustic(NamedTuple):
-    """Static setup for the distributed propagator."""
+class _StepSpec(NamedTuple):
+    """The slice of `TBKernelSpec` a `TBPhysics.update` actually reads."""
+
+    dt: float
+    spacing: Tuple[float, float, float]
+    order: int
+
+
+class DistTBPlan(NamedTuple):
+    """Static setup for the sharded temporally-blocked propagator."""
 
     mesh: Mesh
     grid_shape: Tuple[int, int, int]
-    order: int
-    T: int
-    dt: float
-    spacing: Tuple[float, float, float]
-    ax_x: str
-    ax_y: str
+    physics: phys.TBPhysics = phys.ACOUSTIC
+    order: int = 4
+    T: int = 2
+    dt: float = 1e-3
+    spacing: Tuple[float, float, float] = (10.0, 10.0, 10.0)
+    ax_x: str = "data"
+    ax_y: str = "model"
+    inner: str = "jnp"          # per-shard schedule: "jnp" | "pallas"
+
+    @property
+    def r_step(self) -> int:
+        """Per-timestep halo consumption (order//2 acoustic, order TTI/el)."""
+        return self.physics.step_radius(self.order)
 
     @property
     def halo(self) -> int:
-        return self.T * (self.order // 2)
+        return self.T * self.r_step
+
+    @property
+    def pgrid(self) -> Tuple[int, int]:
+        return (self.mesh.shape[self.ax_x], self.mesh.shape[self.ax_y])
+
+    @property
+    def block(self) -> Tuple[int, int]:
+        """Per-shard local block (bx, by)."""
+        px, py = self.pgrid
+        return (self.grid_shape[0] // px, self.grid_shape[1] // py)
+
+    def validate(self):
+        nx, ny, _ = self.grid_shape
+        px, py = self.pgrid
+        if nx % px or ny % py:
+            raise ValueError(
+                f"grid ({nx}, {ny}) must divide by the ({px}, {py}) mesh")
+        bx, by = self.block
+        if self.halo > min(bx, by):
+            raise ValueError(
+                f"halo depth T*r_step={self.halo} exceeds local block "
+                f"({bx}, {by}); single-hop neighbor exchange requires "
+                f"T*r_step <= block — lower T or use a coarser decomposition")
+        if self.inner not in ("jnp", "pallas"):
+            raise ValueError(f"unknown inner schedule {self.inner!r}")
 
 
-def _local_domain_mask(setup: DistAcoustic, shape_local, dtype):
-    """1.0 inside the global domain for the halo-padded local block."""
-    h = setup.halo
-    nx, ny, _ = setup.grid_shape
-    px = jax.lax.axis_index(setup.ax_x)
-    py = jax.lax.axis_index(setup.ax_y)
+def _local_domain_mask(plan: DistTBPlan, h: int, shape_local, dtype):
+    """1.0 inside the global domain for the depth-h halo-padded local block."""
+    nx, ny, _ = plan.grid_shape
+    px = jax.lax.axis_index(plan.ax_x)
+    py = jax.lax.axis_index(plan.ax_y)
     bx = shape_local[0] - 2 * h
     by = shape_local[1] - 2 * h
     gx = px * bx - h + jax.lax.broadcasted_iota(jnp.int32, shape_local, 0)
@@ -112,124 +173,264 @@ def _local_domain_mask(setup: DistAcoustic, shape_local, dtype):
     return ok.astype(dtype)
 
 
-def _tile_body(setup: DistAcoustic, u0, u1, m_pad, damp_pad, scale_pad,
-               sm_pad, sid_pad, src_tile):
-    """One depth-T time tile on halo-padded local blocks.
+# ---------------------------------------------------------------------------
+# Per-shard inner trapezoids
+# ---------------------------------------------------------------------------
 
-    src_tile: (T, npts) slice of src_dcmp for this tile's timesteps
-    (replicated).  Returns the cropped (un-padded) new (u0, u1).
+def _jnp_shard_tile(physics: phys.TBPhysics, sspec: _StepSpec, T: int, h: int,
+                    state_pads, param_pads, dom, s_coords, s_vals,
+                    r_coords, r_w):
+    """T in-block timesteps on the halo-padded shard — the jnp oracle of the
+    Pallas kernel's unrolled loop (`stencil_tb._tb_kernel`), sharing the
+    same `physics.update` / mask / inject / record sequence.
+
+    Returns (cropped state tuple, rec partials (T, capr, rec_channels)).
     """
-    h = setup.halo
-    dt = jnp.asarray(setup.dt, u1.dtype)
-    u0p = halo_exchange_2d(u0, h, setup.ax_x, setup.ax_y)
-    u1p = halo_exchange_2d(u1, h, setup.ax_x, setup.ax_y)
-    dom = _local_domain_mask(setup, u1p.shape, u1.dtype)
-    den = m_pad + damp_pad * dt
-    safe_sid = jnp.maximum(sid_pad, 0)
-    smf = sm_pad.astype(u1.dtype)
+    state = dict(zip(physics.state_fields, state_pads))
+    params = dict(zip(physics.param_fields, param_pads))
+    mask_fn = lambda a: a * dom  # noqa: E731
+    sx, sy, sz = s_coords[:, 0], s_coords[:, 1], s_coords[:, 2]
+    rx, ry, rz = r_coords[:, 0], r_coords[:, 1], r_coords[:, 2]
+    recs = []
+    for k in range(T):
+        new = physics.update(state, params, sspec, mask_fn)
+        for f in physics.evolved_fields:
+            if f not in physics.premasked_fields:
+                new[f] = new[f] * dom
+        # fused grid-aligned injection (paper Listing 4); padding slots
+        # carry val = 0 and scatter harmlessly onto window point (0, 0, 0)
+        for f in physics.inject_fields:
+            new[f] = new[f].at[sx, sy, sz].add(s_vals[k].astype(new[f].dtype))
+        # per-step receiver partials (paper Fig. 3b gather, local entries)
+        recs.append(jnp.stack(
+            [(arr[rx, ry, rz] * r_w).astype(arr.dtype)
+             for arr in physics.record(new)], axis=-1))
+        state = new
+    wx, wy = state_pads[0].shape[0], state_pads[0].shape[1]
+    crop = (slice(h, wx - h), slice(h, wy - h), slice(None))
+    return (tuple(state[f][crop] for f in physics.state_fields),
+            jnp.stack(recs, axis=0))
 
-    for k in range(setup.T):
-        lap = st.laplacian(u1p, setup.spacing, setup.order)
-        u_next = (dt * dt * lap + m_pad * (2.0 * u1p - u0p)
-                  + damp_pad * dt * u1p) / den
-        u_next = u_next * dom
-        # fused grid-aligned injection (paper Listing 4), local by
-        # construction: gather from the replicated decomposed wavelets
-        inc = src_tile[k][safe_sid] * smf * scale_pad
-        u_next = u_next + inc.astype(u_next.dtype)
-        u0p, u1p = u1p, u_next
 
-    crop = (slice(h, u1p.shape[0] - h), slice(h, u1p.shape[1] - h),
-            slice(None))
-    return u0p[crop], u1p[crop]
+def _pallas_shard_tile(plan: DistTBPlan, T: int, h: int, state_pads,
+                       param_pads, dom, s_coords, s_vals, r_coords, r_w,
+                       interpret: bool):
+    """Run the shard's inner trapezoid through the actual Pallas TB kernel:
+    the shard block is the kernel's grid (one spatial tile covering it) and
+    the shard's exchanged halo plays the role of the kernel's zero padding,
+    with the domain mask supplied externally (it depends on the shard
+    offset, which the kernel spec cannot know statically)."""
+    from repro.kernels import stencil_tb as ker
+
+    wx, wy, nz = state_pads[0].shape
+    bx, by = wx - 2 * h, wy - 2 * h
+    spec = ker.TBKernelSpec(
+        nx=bx, ny=by, nz=nz, tile=(bx, by), T=T, order=plan.order,
+        dt=float(plan.dt), spacing=tuple(float(s) for s in plan.spacing),
+        src_cap=s_coords.shape[0], rec_cap=r_coords.shape[0],
+        dtype=state_pads[0].dtype, step_radius=plan.r_step,
+        rec_channels=plan.physics.rec_channels)
+    new, rec = ker.tb_time_tile(
+        spec, plan.physics, state_pads, param_pads,
+        s_coords[None], s_vals[None], r_coords[None], r_w[None],
+        dom_pad=dom, interpret=interpret)
+    return new, rec.reshape(T, r_coords.shape[0], plan.physics.rec_channels)
 
 
-def distributed_propagate(setup: DistAcoustic, nt: int, u0, u1, m, damp,
-                          g: Optional[src_mod.GriddedSources],
-                          receivers: Optional[src_mod.GriddedReceivers] = None):
-    """Temporally-blocked distributed propagation.
+# ---------------------------------------------------------------------------
+# Sharded driver
+# ---------------------------------------------------------------------------
 
-    u0/u1/m/damp are GLOBAL arrays (sharded or not — jit handles layout via
-    the shard_map specs).  Receivers are interpolated every T steps (tile
-    granularity) on the global sharded field; per-step receivers require
-    T=1 (documented trade-off of the distributed schedule).
+def _depth_setup(plan: DistTBPlan, T_depth: int,
+                 g: Optional[src_mod.GriddedSources],
+                 receivers: Optional[src_mod.GriddedReceivers],
+                 params: Dict[str, jnp.ndarray], interpret: bool):
+    """Build the shard_map'd tile function + its sharded tables and padded
+    params for one time-tile depth (main T or the nt % T remainder).
 
-    Returns ((u0, u1) final, recs (num_tiles, nrec) | None).
+    The host-built tables depend only on geometry (g's affected points,
+    block, halo) — never on `params` — so this whole setup traces cleanly
+    under jit; the param-dependent injection scale is gathered in-graph by
+    the tile function (table `scale` column = 1/0 validity mask)."""
+    physics = plan.physics
+    ns = len(physics.state_fields)
+    npar = len(physics.param_fields)
+    px, py = plan.pgrid
+    bx, by = plan.block
+    h = T_depth * plan.r_step
+    spec3 = P(plan.ax_x, plan.ax_y, None)
+
+    # --- host-side owner-sharded source/receiver tables ---------------------
+    if g is not None:
+        tab = src_mod.tile_source_tables(
+            g, plan.grid_shape, (bx, by), h, include_halo=T_depth > 1)
+        s_coords = tab.coords.reshape(px, py, -1, 3)
+        s_sid = tab.sid.reshape(px, py, -1)
+        s_mask = tab.scale.reshape(px, py, -1)   # 1 valid / 0 padding
+    else:
+        s_coords = jnp.zeros((px, py, 1, 3), jnp.int32)
+        s_sid = jnp.full((px, py, 1), -1, jnp.int32)
+        s_mask = jnp.zeros((px, py, 1), jnp.float32)
+    if receivers is not None:
+        rtab = src_mod.tile_receiver_tables(receivers, plan.grid_shape,
+                                            (bx, by), h)
+        r_coords = rtab.coords.reshape(px, py, -1, 3)
+        r_w = rtab.weight.reshape(px, py, -1)
+    else:
+        rtab = None
+        r_coords = jnp.zeros((px, py, 1, 3), jnp.int32)
+        r_w = jnp.zeros((px, py, 1), jnp.float32)
+
+    # --- time-invariant param halos (exchanged once per depth) --------------
+    fills = dict(physics.param_fills)
+
+    @functools.partial(_shard_map, mesh=plan.mesh,
+                       in_specs=(spec3,) * npar,
+                       out_specs=(spec3,) * (npar + 1))
+    def prepare(*ps):
+        pads = [halo_exchange_2d(p, h, plan.ax_x, plan.ax_y) for p in ps]
+        dom = _local_domain_mask(plan, h, pads[0].shape, pads[0].dtype)
+        out = []
+        for f, pad in zip(physics.param_fields, pads):
+            fill = fills.get(f, 0.0)
+            if fill:
+                pad = jnp.where(dom > 0, pad, jnp.asarray(fill, pad.dtype))
+            out.append(pad)
+        return (*out, dom)
+
+    prepped = prepare(*[params[f] for f in physics.param_fields])
+    param_pads, dom_pad = prepped[:npar], prepped[npar]
+
+    # --- one outer-trapezoid tile: exchange + T local steps -----------------
+    sspec = _StepSpec(float(plan.dt), tuple(float(s) for s in plan.spacing),
+                      plan.order)
+    in_specs = ((spec3,) * ns + (spec3,) * npar + (spec3,)
+                + (P(plan.ax_x, plan.ax_y, None, None),
+                   P(plan.ax_x, plan.ax_y, None),
+                   P(plan.ax_x, plan.ax_y, None))
+                + (P(plan.ax_x, plan.ax_y, None, None),
+                   P(plan.ax_x, plan.ax_y, None))
+                + (P(None, None), P(None)))
+    out_specs = ((spec3,) * ns
+                 + (P(plan.ax_x, plan.ax_y, None, None, None),))
+
+    # check_rep=False: the replication checker has no rule for pallas_call
+    # (the inner="pallas" path); every output is explicitly sharded anyway.
+    @functools.partial(_shard_map, mesh=plan.mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_rep=False)
+    def tile(*args):
+        sblocks = args[:ns]
+        ppads = args[ns:ns + npar]
+        dom = args[ns + npar]
+        sc, sid, smask, rc, rw, src_win, scale_vec = args[ns + npar + 1:]
+        sc, sid, smask = sc[0, 0], sid[0, 0], smask[0, 0]
+        rc, rw = rc[0, 0], rw[0, 0]
+        # ONE deep exchange per depth-T tile (the whole point)
+        spads = tuple(halo_exchange_2d(b, h, plan.ax_x, plan.ax_y)
+                      for b in sblocks)
+        # per-shard injection values: gather the replicated decomposed
+        # wavelets at this shard's affected points, with the (possibly
+        # traced) param-dependent scale gathered in-graph
+        safe = jnp.maximum(sid, 0)
+        sv = (src_win[:, safe]
+              * (scale_vec[safe] * smask)[None, :]).astype(spads[0].dtype)
+        if plan.inner == "pallas":
+            new, parts = _pallas_shard_tile(plan, T_depth, h, spads, ppads,
+                                            dom, sc, sv, rc, rw, interpret)
+        else:
+            new, parts = _jnp_shard_tile(physics, sspec, T_depth, h, spads,
+                                         ppads, dom, sc, sv, rc, rw)
+        return (*new, parts[None, None])
+
+    def run_tile(state, src_win, scale_vec):
+        outs = tile(*state, *param_pads, dom_pad, s_coords, s_sid, s_mask,
+                    r_coords, r_w, src_win, scale_vec)
+        return tuple(outs[:ns]), outs[ns]
+
+    return run_tile, rtab
+
+
+def sharded_tb_propagate(plan: DistTBPlan, nt: int,
+                         state: Tuple[jnp.ndarray, ...],
+                         params: Dict[str, jnp.ndarray],
+                         g: Optional[src_mod.GriddedSources] = None,
+                         receivers: Optional[src_mod.GriddedReceivers] = None,
+                         *, interpret: bool = True):
+    """Temporally-blocked sharded propagation of any registered physics.
+
+    Semantics identical to the matching `kernels.ref.*_reference` (tested):
+    `state` is ordered as `plan.physics.state_fields`, `params` maps
+    `param_fields` to GLOBAL (nx, ny, nz) arrays (sharded or not — jit
+    handles layout via the shard_map specs).  `nt` need not divide by
+    `plan.T`; the remainder runs as a shallower tile with its own
+    (smaller) exchange depth, mirroring `kernels/ops._tb_propagate`.
+
+    Returns (final state tuple, rec (nt, nrec, rec_channels) | None) with
+    per-step receiver samples at any T (each shard records masked partials,
+    segment-summed by receiver id across shards).
+
+    jit-compatible in `state`/`params` (sharded or not — the shard_map
+    specs handle layout): the host-side table build depends only on `g`
+    and the static plan, and the param-dependent injection scale is
+    gathered in-graph.
     """
-    if nt % setup.T:
-        raise ValueError(f"nt={nt} must divide by T={setup.T}")
-    h = setup.halo
-    mesh = setup.mesh
-    px = mesh.shape[setup.ax_x]
-    py = mesh.shape[setup.ax_y]
-    bx = setup.grid_shape[0] // px
-    by = setup.grid_shape[1] // py
-    if h > min(bx, by):
-        raise ValueError(
-            f"halo depth T*r={h} exceeds local block ({bx}, {by}); "
-            f"single-hop neighbor exchange requires T*r <= block — lower T "
-            f"or use a coarser decomposition")
-    spec = P(setup.ax_x, setup.ax_y, None)
-
-    # static per-shard fields, halo-padded once (they are time-invariant)
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(spec, spec),
-        out_specs=(spec, spec))
-    def prepare(m_l, damp_l):
-        m_p = halo_exchange_2d(m_l, h, setup.ax_x, setup.ax_y)
-        damp_p = halo_exchange_2d(damp_l, h, setup.ax_x, setup.ax_y)
-        m_safe = jnp.where(m_p == 0, 1.0, m_p)  # zeros only outside domain
-        return m_safe, damp_p
+    physics = plan.physics
+    plan.validate()
+    state = tuple(state)
+    if len(state) != len(physics.state_fields):
+        raise ValueError(f"{physics.name} carries "
+                         f"{len(physics.state_fields)} state fields, "
+                         f"got {len(state)}")
+    nrec = receivers.num if receivers is not None else 0
+    nchan = physics.rec_channels
+    dtype = state[0].dtype
 
     if g is not None:
-        sm = g.sm
-        sid = g.sid
-        scale_field = (setup.dt ** 2) / jnp.where(m == 0, 1.0, m)
+        if g.nt < nt:
+            raise ValueError(f"source wavelets cover {g.nt} steps < nt={nt}")
         src_dcmp = g.src_dcmp
+        scale_vec = jnp.asarray(
+            physics.inject_scale(params, g, float(plan.dt)),
+            jnp.float32)
     else:
-        sm = jnp.zeros(setup.grid_shape, jnp.uint8)
-        sid = jnp.full(setup.grid_shape, -1, jnp.int32)
-        scale_field = jnp.zeros(setup.grid_shape, m.dtype)
-        src_dcmp = jnp.zeros((nt, 1), m.dtype)
+        src_dcmp = jnp.zeros((max(nt, 1), 1), dtype)
+        scale_vec = jnp.zeros((1,), jnp.float32)
 
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(spec, spec, spec),
-        out_specs=(spec, spec, spec))
-    def prepare_src(sm_l, sid_l, scale_l):
-        sm_p = halo_exchange_2d(sm_l.astype(jnp.int32), h, setup.ax_x,
-                                setup.ax_y)
-        # sid halo: exchange sid+1 so missing neighbors (zeros) decode to -1
-        sid_p = halo_exchange_2d(sid_l + 1, h, setup.ax_x, setup.ax_y) - 1
-        scale_p = halo_exchange_2d(scale_l, h, setup.ax_x, setup.ax_y)
-        return sm_p, sid_p, scale_p
+    def src_window(t0, T_depth):
+        return jax.lax.dynamic_slice(src_dcmp, (t0, 0),
+                                     (T_depth, src_dcmp.shape[1]))
 
-    @functools.partial(
-        _shard_map, mesh=mesh,
-        in_specs=(spec, spec, spec, spec, spec, spec, spec, P(None, None)),
-        out_specs=(spec, spec))
-    def tile(u0_l, u1_l, m_p, damp_p, scale_p, sm_p, sid_p, src_tile):
-        return _tile_body(setup, u0_l, u1_l, m_p, damp_p, scale_p, sm_p,
-                          sid_p, src_tile)
+    n_main = nt // plan.T
+    rem = nt - n_main * plan.T
 
-    # NOTE: prepare pads along both axes => padded shapes; keep as separate
-    # arrays threaded through the scan (they are small relative to u).
-    m_p, damp_p = prepare(m, damp)
-    sm_p, sid_p, scale_p = prepare_src(sm, sid, scale_field)
+    recs_main = None
+    if n_main > 0:
+        run_tile, rtab = _depth_setup(plan, plan.T, g, receivers, params,
+                                      interpret)
 
-    num_tiles = nt // setup.T
+        def body(carry, tile_idx):
+            new, parts = run_tile(carry, src_window(tile_idx * plan.T,
+                                                    plan.T), scale_vec)
+            rec = (ops_mod.combine_rec_partials(parts, rtab, nrec)
+                   if receivers is not None
+                   else jnp.zeros((plan.T, 0, nchan), dtype))
+            return new, rec
 
-    def body(carry, tile_idx):
-        u0c, u1c = carry
-        t0 = tile_idx * setup.T
-        src_tile = jax.lax.dynamic_slice(
-            src_dcmp, (t0, 0), (setup.T, src_dcmp.shape[1]))
-        u0n, u1n = tile(u0c, u1c, m_p, damp_p, scale_p, sm_p, sid_p,
-                        src_tile)
-        rec = (src_mod.interpolate(u1n, receivers)
-               if receivers is not None else jnp.zeros((0,), u1n.dtype))
-        return (u0n, u1n), rec
+        state, recs_main = jax.lax.scan(body, state, jnp.arange(n_main))
+        recs_main = recs_main.reshape(n_main * plan.T, -1, nchan)
 
-    (u0f, u1f), recs = jax.lax.scan(body, (u0, u1), jnp.arange(num_tiles))
-    return (u0f, u1f), (recs if receivers is not None else None)
+    if rem > 0:
+        rplan = plan._replace(T=rem)
+        run_rem, rrtab = _depth_setup(rplan, rem, g, receivers, params,
+                                      interpret)
+        state, parts = run_rem(state, src_window(n_main * plan.T, rem),
+                               scale_vec)
+        rec_rem = (ops_mod.combine_rec_partials(parts, rrtab, nrec)
+                   if receivers is not None
+                   else jnp.zeros((rem, 0, nchan), dtype))
+        recs = (jnp.concatenate([recs_main, rec_rem], axis=0)
+                if recs_main is not None else rec_rem)
+    else:
+        recs = recs_main
+
+    return state, (recs if receivers is not None else None)

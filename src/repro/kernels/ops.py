@@ -73,9 +73,13 @@ def _src_vals_for_tile(g: src_mod.GriddedSources, src_tab, t0, T: int):
     return sv
 
 
-def _combine_rec_partials(rec_part: jnp.ndarray, rec_tab, nrec: int):
+def combine_rec_partials(rec_part: jnp.ndarray, rec_tab, nrec: int):
     """(ntx, nty, T, capr, nchan) partials -> (T, nrec, nchan) samples
-    (segment sum over receiver ids; paper Fig. 3b gather)."""
+    (segment sum over receiver ids; paper Fig. 3b gather).
+
+    Shared by the single-device tile driver below and the sharded execution
+    layer (`distributed/halo.py`), whose per-shard partials have the same
+    (tiles..., T, cap, chan) layout — one tile per shard."""
     ntx, nty, T, capr, nchan = rec_part.shape
     ids = jnp.where(rec_tab.rid < 0, nrec, rec_tab.rid).reshape(-1)
     vals = rec_part.reshape(ntx * nty, T, capr, nchan)
@@ -108,7 +112,7 @@ def _run_time_tile(spec: ker.TBKernelSpec, physics: phys.TBPhysics,
         spec, physics, state_pads, param_pads, s_coords, s_vals, r_coords,
         r_w, interpret=interpret)
     if rec_tab is not None:
-        rec = _combine_rec_partials(rec_part, rec_tab, nrec)
+        rec = combine_rec_partials(rec_part, rec_tab, nrec)
     else:
         rec = jnp.zeros((spec.T, 0, physics.rec_channels), spec.dtype)
     return new_state, rec

@@ -126,17 +126,24 @@ def _point_mask(shape, x, y, z):
     return (ix == x) & (iy == y) & (iz == z)
 
 
-def _tb_kernel(spec: TBKernelSpec, physics: phys.TBPhysics, *refs):
+def _tb_kernel(spec: TBKernelSpec, physics: phys.TBPhysics,
+               external_dom: bool, *refs):
     """Generic multi-field TB kernel body.
 
     Ref layout (positional, in pallas_call order):
-      inputs:  n_state + n_param HBM refs, then src_coords, src_vals,
-               rec_coords, rec_w
+      inputs:  n_state + n_param HBM refs (+ a domain-mask HBM ref when
+               `external_dom`), then src_coords, src_vals, rec_coords, rec_w
       outputs: n_state centre refs, then rec partials
-      scratch: n_state + n_param VMEM windows, then a DMA semaphore array
+      scratch: one VMEM window per HBM ref, then a DMA semaphore array
+
+    `external_dom` is how the sharded execution layer reuses this kernel
+    unchanged (DESIGN.md §4): on a single device the domain mask is an iota
+    predicate derived from the spec, but on a shard of a decomposed grid it
+    depends on the shard's global offset, so the caller supplies it as one
+    more time-invariant window.
     """
     ns = len(physics.state_fields)
-    nw = physics.num_windows
+    nw = physics.num_windows + (1 if external_dom else 0)
     hbm = refs[:nw]
     src_coords_ref, src_vals_ref, rec_coords_ref, rec_w_ref = refs[nw:nw + 4]
     out_refs = refs[nw + 4:nw + 4 + ns]
@@ -161,7 +168,7 @@ def _tb_kernel(spec: TBKernelSpec, physics: phys.TBPhysics, *refs):
     for c in copies:
         c.wait()
 
-    dom = _domain_mask(spec, ti, tj)
+    dom = wins[nw - 1][...] if external_dom else _domain_mask(spec, ti, tj)
     mask_fn = lambda a: a * dom  # noqa: E731
 
     state = {f: wins[i][...] for i, f in enumerate(physics.state_fields)}
@@ -212,7 +219,7 @@ def _tb_kernel(spec: TBKernelSpec, physics: phys.TBPhysics, *refs):
 def tb_time_tile(spec: TBKernelSpec, physics: phys.TBPhysics,
                  state_pads, param_pads,
                  src_coords, src_vals, rec_coords, rec_w,
-                 *, interpret: bool = True):
+                 *, dom_pad=None, interpret: bool = True):
     """One depth-T time tile over the whole grid (one pallas_call).
 
     Args:
@@ -222,14 +229,19 @@ def tb_time_tile(spec: TBKernelSpec, physics: phys.TBPhysics,
       src_coords: (ntiles, cap, 3) window-local int32.
       src_vals:   (ntiles, T, cap) f32, scale folded in, 0 on padding.
       rec_coords: (ntiles, capr, 3); rec_w: (ntiles, capr).
+      dom_pad:    optional (nx + 2H, ny + 2H, nz) 0/1 domain mask overriding
+                  the spec-derived one — used when this kernel runs on one
+                  shard of a decomposed grid (distributed/halo.py), where
+                  "inside the physical domain" depends on the shard offset.
     Returns (new_states tuple, rec_partials) with fields (nx, ny, nz) and
     rec_partials (ntx, nty, T, capr, rec_channels).
     """
     ns = len(physics.state_fields)
-    nw = physics.num_windows
+    external_dom = dom_pad is not None
+    nw = physics.num_windows + (1 if external_dom else 0)
     ntx, nty = spec.ntiles
     wx, wy, wz = spec.window
-    kern = functools.partial(_tb_kernel, spec, physics)
+    kern = functools.partial(_tb_kernel, spec, physics, external_dom)
     flat = lambda i, j: (i * nty + j, 0, 0)  # noqa: E731
 
     field_out_spec = pl.BlockSpec((spec.tile[0], spec.tile[1], spec.nz),
@@ -262,7 +274,9 @@ def tb_time_tile(spec: TBKernelSpec, physics: phys.TBPhysics,
             + [pltpu.SemaphoreType.DMA((nw,))]
         ),
         interpret=interpret,
-    )(*state_pads, *param_pads, src_coords, src_vals, rec_coords, rec_w)
+    )(*state_pads, *param_pads,
+      *((dom_pad,) if external_dom else ()),
+      src_coords, src_vals, rec_coords, rec_w)
     return tuple(outs[:ns]), outs[ns]
 
 

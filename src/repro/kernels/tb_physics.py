@@ -23,6 +23,9 @@ and receiver partials live in the physics-agnostic driver
   update         one in-VMEM timestep on window-shaped arrays
   record         fields sampled at receiver points (after injection)
   inject_scale   host-side per-affected-point injection factor
+  param_fills    safe values for param cells *outside* the physical domain
+                 (the sharded driver's halo exchange brings in zeros there;
+                 acoustic/TTI divide by m, so m needs a non-zero fill)
 
 The update functions call the *same* `stencil_update` used by the reference
 propagators in `core/propagators/` — the only addition is the domain mask
@@ -68,6 +71,9 @@ class TBPhysics:
     # evolved fields the update already domain-masked itself (via mask_fn);
     # the driver skips its own mask for these to avoid a redundant multiply
     premasked_fields: Tuple[str, ...] = ()
+    # (field, value) pairs: what out-of-domain param cells must hold so the
+    # update stays finite there (everything it computes is re-masked anyway)
+    param_fills: Tuple[Tuple[str, float], ...] = ()
 
     @property
     def num_windows(self) -> int:
@@ -93,7 +99,10 @@ def _acoustic_update(state, params, spec, mask_fn):
 
 
 def _acoustic_scale(params, g, dt):
-    return np.asarray((dt ** 2) / src_mod.point_scale(params["m"], g))
+    # Returns jnp so it stays traceable under jit (the sharded driver
+    # gathers it in-graph); `ops.build_tables` wraps it in np.asarray for
+    # its eager host-side table build.
+    return (dt ** 2) / src_mod.point_scale(params["m"], g)
 
 
 ACOUSTIC = TBPhysics(
@@ -107,6 +116,7 @@ ACOUSTIC = TBPhysics(
     update=_acoustic_update,
     record=lambda s: (s["u"],),
     inject_scale=_acoustic_scale,
+    param_fills=(("m", 1.0),),   # update divides by m + damp*dt
 )
 
 
@@ -138,6 +148,7 @@ TTI = TBPhysics(
     update=_tti_update,
     record=lambda s: (s["p"],),
     inject_scale=_acoustic_scale,   # same dt^2/m factor as acoustic
+    param_fills=(("m", 1.0),),   # update divides by m + damp*dt
 )
 
 

@@ -34,3 +34,13 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     data = n // model
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_xy_mesh():
+    """(data, model) mesh over all local devices for the x/y grid
+    decomposition — the one topology heuristic shared by the distributed
+    stencil launcher and benchmarks (4 devices -> 2x2, 8 -> 4x2, ...)."""
+    n = len(jax.devices())
+    px = n // 2 if n >= 4 else n
+    py = n // px
+    return make_mesh((px, py), ("data", "model"))

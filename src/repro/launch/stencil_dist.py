@@ -1,24 +1,116 @@
-"""Distributed stencil launcher + self-check.
+"""Distributed multi-physics stencil launcher + self-check.
 
-Runs the temporally-blocked, halo-exchanged acoustic propagator over
-whatever devices exist (real TPUs or forced host devices) and optionally
-checks bit-level agreement with the single-device Listing-1 reference.
+Runs the sharded temporally-blocked execution layer (DESIGN.md §4) for any
+registered physics over whatever devices exist (real TPUs or forced host
+devices) and optionally checks agreement — wavefields AND per-step receiver
+traces — with the single-device Listing-1 reference.
 
   # correctness check on 8 forced host devices:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m repro.launch.stencil_dist --check --n 32 --nt 8 --T 2
 
+  # the same for the 9-field elastic system, remainder tile included:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.stencil_dist --check --physics elastic \
+      --n 32 --nt 5 --T 2
+
+  # receiver-trace invariance across time-tile depths:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.stencil_dist --sweep-T 1,2,4 --n 32 --nt 8
+
+  # run the actual Pallas kernel per shard (inner trapezoid):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.stencil_dist --check --inner pallas --n 32
+
   # production-mesh dry-run (lower+compile only) for the paper's 512^3 case:
   python -m repro.launch.stencil_dist --dryrun --multipod
 """
 import argparse
+import functools
 import os
 import sys
 
 
+def _build_case(physics_name, shape, order, dt, grid, rng):
+    """(physics, state tuple, params dict, ref_fn) for one physics.
+
+    ref_fn(nt, g, gr) -> (state tuple in state_fields order,
+                          rec (nt, nrec, rec_channels))."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import boundary
+    from repro.kernels import ref
+    from repro.kernels import tb_physics as phys
+
+    vp = 1500.0 + 1000.0 * rng.rand(*shape)
+    damp = boundary.damping_field(shape, nbl=3,
+                                  spacing=grid.spacing).astype(jnp.float32)
+    physics = phys.PHYSICS[physics_name]
+
+    def rand_fields(k):
+        return [jnp.asarray(0.01 * rng.randn(*shape), jnp.float32)
+                for _ in range(k)]
+
+    if physics_name == "acoustic":
+        m = jnp.asarray(1.0 / vp ** 2, jnp.float32)
+        state = tuple(rand_fields(2))          # (u_prev, u)
+        params = {"m": m, "damp": damp}
+
+        def ref_fn(nt, g, gr):
+            (r0, r1), recs = ref.acoustic_reference(
+                nt, state[0], state[1], m, damp, dt,
+                grid.spacing, order, g=g, receivers=gr)
+            return (r0, r1), recs[..., None]
+    elif physics_name == "tti":
+        from repro.core.propagators import tti as tt
+        params = {
+            "m": jnp.asarray(1.0 / vp ** 2, jnp.float32), "damp": damp,
+            "epsilon": jnp.asarray(0.2 * rng.rand(*shape), jnp.float32),
+            "delta": jnp.asarray(0.1 * rng.rand(*shape), jnp.float32),
+            "theta": jnp.asarray(0.3 * rng.randn(*shape), jnp.float32),
+            "phi": jnp.asarray(0.3 * rng.randn(*shape), jnp.float32)}
+        state = tuple(rand_fields(4))          # (p, p_prev, r, r_prev)
+
+        def ref_fn(nt, g, gr):
+            rst, recs = ref.tti_reference(
+                nt, tt.TTIState(*state), tt.TTIParams(**params),
+                dt, grid.spacing, order, g=g, receivers=gr)
+            return (tuple(getattr(rst, f) for f in physics.state_fields),
+                    recs[..., None])
+    elif physics_name == "elastic":
+        from repro.core.propagators import elastic as el
+        rho = 2000.0 + 100.0 * rng.rand(*shape)
+        vs = vp / 1.9
+        params = {
+            "lam": jnp.asarray(rho * (vp ** 2 - 2 * vs ** 2) * 1e-6,
+                               jnp.float32),
+            "mu": jnp.asarray(rho * vs ** 2 * 1e-6, jnp.float32),
+            "b": jnp.asarray(1.0 / rho, jnp.float32), "damp": damp}
+        state = tuple(rand_fields(9))
+
+        def ref_fn(nt, g, gr):
+            rst, recs = ref.elastic_reference(
+                nt, el.ElasticState(*state), el.ElasticParams(**params),
+                dt, grid.spacing, order, g=g, receivers=gr)
+            return (tuple(getattr(rst, f) for f in physics.state_fields),
+                    recs)
+    else:
+        raise ValueError(f"unknown physics {physics_name!r}")
+    return physics, state, params, ref_fn
+
+
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--physics", default="acoustic",
+                    choices=("acoustic", "tti", "elastic"))
+    ap.add_argument("--inner", default="jnp", choices=("jnp", "pallas"),
+                    help="per-shard schedule: jnp oracle or the Pallas TB "
+                         "kernel (interpret mode off-TPU)")
     ap.add_argument("--check", action="store_true")
+    ap.add_argument("--sweep-T", default=None,
+                    help="comma list of T depths; checks per-step receiver "
+                         "traces agree across all of them")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--multipod", action="store_true")
     ap.add_argument("--n", type=int, default=32)
@@ -35,77 +127,106 @@ def main():
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core import boundary, sources as S
+    from repro.core import sources as S
     from repro.core.grid import Grid
-    from repro.distributed.halo import DistAcoustic, distributed_propagate
-    from repro.kernels import ref
+    from repro.distributed.halo import DistTBPlan, sharded_tb_propagate
+    from repro.kernels import tb_physics as phys
     from repro.launch import mesh as mesh_lib
 
     if args.dryrun:
         mesh = mesh_lib.make_production_mesh(multi_pod=args.multipod)
-        ax_x = ("pod", "data") if args.multipod else "data"
-        # fold pod into x by treating ("pod","data") as one logical axis:
-        # shard_map needs named axes; use data/model and replicate over pod.
         n = 512
         shape = (n, n, n)
         grid = Grid(shape=shape, spacing=(10.0,) * 3)
-        setup = DistAcoustic(mesh=mesh, grid_shape=shape, order=args.order,
-                             T=args.T, dt=1e-3, spacing=grid.spacing,
-                             ax_x="data", ax_y="model")
+        plan = DistTBPlan(mesh=mesh, grid_shape=shape,
+                          physics=phys.PHYSICS[args.physics],
+                          order=args.order, T=args.T, dt=1e-3,
+                          spacing=grid.spacing)
+        ns = len(plan.physics.state_fields)
+        npar = len(plan.physics.param_fields)
         u = jax.ShapeDtypeStruct(shape, jnp.float32)
-        fn = lambda u0, u1, m, d: distributed_propagate(  # noqa: E731
-            setup, args.T * 2, u0, u1, m, d, None)
+
+        def fn(*arrays):
+            state = arrays[:ns]
+            params = dict(zip(plan.physics.param_fields, arrays[ns:]))
+            return sharded_tb_propagate(plan, args.T * 2, state, params,
+                                        None)
+
         with mesh:
-            lowered = jax.jit(fn).lower(u, u, u, u)
+            lowered = jax.jit(fn).lower(*([u] * (ns + npar)))
             compiled = lowered.compile()
             print("memory:", compiled.memory_analysis())
             ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):  # per-device list on some jax
+                ca = ca[0] if ca else {}
             print("flops: %.4g" % ca.get("flops", float("nan")))
             hlo = compiled.as_text()
             from repro.launch.dryrun import collective_bytes
             print("collectives:", collective_bytes(hlo))
-        print("stencil distributed dry-run OK "
-              f"({'multi' if args.multipod else 'single'}-pod)")
+        print(f"stencil distributed dry-run OK ({args.physics}, "
+              f"{'multi' if args.multipod else 'single'}-pod)")
         return 0
 
-    devices = jax.devices()
-    ndev = len(devices)
-    px = ndev // 2 if ndev >= 4 else ndev
-    py = ndev // px
-    mesh = mesh_lib.make_mesh((px, py), ("data", "model"))
-    n, nt, T, order = args.n, args.nt, args.T, args.order
+    mesh = mesh_lib.make_xy_mesh()
+    n, nt, order = args.n, args.nt, args.order
     shape = (n, n, n // 2)
     grid = Grid(shape=shape, spacing=(10.0,) * 3)
+    dt = grid.cfl_dt(3000.0, order)
 
     rng = np.random.RandomState(0)
-    vp = 1500.0 + 1000.0 * rng.rand(*shape)
-    m = jnp.asarray(1.0 / vp ** 2, jnp.float32)
-    damp = boundary.damping_field(shape, nbl=3, spacing=grid.spacing)
-    dt = grid.cfl_dt(2500.0, order)
-    src = S.SparseOperator(
-        5.0 + rng.rand(3, 3) * (np.asarray(grid.extent) - 10.0))
+    physics, state, params, ref_fn = _build_case(args.physics, shape, order,
+                                                 dt, grid, rng)
+    ext = np.asarray(grid.extent)
+    src = S.SparseOperator(5.0 + rng.rand(3, 3) * (ext - 10.0))
     wav = S.ricker_wavelet(nt, dt, f0=12.0, num=3)
     g = S.precompute(src, grid, wav)
-    u0 = jnp.asarray(0.01 * rng.randn(*shape), jnp.float32)
-    u1 = jnp.asarray(0.01 * rng.randn(*shape), jnp.float32)
+    rec = S.SparseOperator(5.0 + rng.rand(4, 3) * (ext - 10.0))
+    gr = S.precompute_receivers(rec, grid)
 
-    setup = DistAcoustic(mesh=mesh, grid_shape=shape, order=order, T=T,
-                         dt=dt, spacing=grid.spacing, ax_x="data",
-                         ax_y="model")
-    with mesh:
-        (d0, d1), _ = jax.jit(
-            lambda *a: distributed_propagate(setup, nt, *a, g))(
-                u0, u1, m, damp)
-    print(f"distributed propagate done on mesh {dict(mesh.shape)}")
+    def run(T):
+        plan = DistTBPlan(mesh=mesh, grid_shape=shape, physics=physics,
+                          order=order, T=T, dt=dt, spacing=grid.spacing,
+                          inner=args.inner)
+        # jit on purpose: the parity checks double as a regression test of
+        # the driver's jit-compatibility contract (state/params traced)
+        fn = jax.jit(functools.partial(sharded_tb_propagate, plan, nt,
+                                       g=g, receivers=gr))
+        with mesh:
+            return fn(state, params)
+
+    def tol_ok(err, scale):
+        return err <= 5e-4 * scale + 1e-6
+
+    if args.sweep_T:
+        depths = [int(t) for t in args.sweep_T.split(",")]
+        traces = {T: np.asarray(run(T)[1]) for T in depths}
+        base = traces[depths[0]]
+        scale = float(np.max(np.abs(base))) + 1e-30
+        ok = True
+        for T in depths[1:]:
+            err = float(np.max(np.abs(traces[T] - base)))
+            print(f"trace T={T} vs T={depths[0]}: max|err| {err:.3e} "
+                  f"(scale {scale:.3e})")
+            ok = ok and tol_ok(err, scale)
+        print("SWEEP", "PASS" if ok else "FAIL")
+        return 0 if ok else 1
+
+    dstate, drec = run(args.T)
+    print(f"sharded {args.physics} propagate done on mesh "
+          f"{dict(mesh.shape)} (inner={args.inner}, nt={nt}, T={args.T})")
 
     if args.check:
-        (r0, r1), _ = ref.acoustic_reference(nt, u0, u1, m, damp, dt,
-                                             grid.spacing, order, g=g)
-        err1 = float(jnp.max(jnp.abs(d1 - r1)))
-        err0 = float(jnp.max(jnp.abs(d0 - r0)))
-        scale = float(jnp.max(jnp.abs(r1))) + 1e-30
-        print(f"max|err| u1={err1:.3e} u0={err0:.3e} (field scale {scale:.3e})")
-        ok = err1 <= 5e-4 * scale + 1e-6 and err0 <= 5e-4 * scale + 1e-6
+        rstate, rrec = ref_fn(nt, g, gr)
+        ok = True
+        for f, dv, rv in zip(physics.state_fields, dstate, rstate):
+            err = float(jnp.max(jnp.abs(dv - rv)))
+            scale = float(jnp.max(jnp.abs(rv))) + 1e-30
+            print(f"max|err| {f}={err:.3e} (field scale {scale:.3e})")
+            ok = ok and tol_ok(err, scale)
+        rec_err = float(np.max(np.abs(np.asarray(drec) - np.asarray(rrec))))
+        rec_scale = float(np.max(np.abs(np.asarray(rrec)))) + 1e-30
+        print(f"max|err| rec={rec_err:.3e} (trace scale {rec_scale:.3e})")
+        ok = ok and tol_ok(rec_err, rec_scale)
         print("CHECK", "PASS" if ok else "FAIL")
         return 0 if ok else 1
     return 0

@@ -117,6 +117,30 @@ def test_tti_tb_matches_reference(T, tile, nt):
                                rtol=RTOL, atol=ATOL)
 
 
+def test_acoustic_tb_remainder_tile():
+    """nt % T != 0 remainder-tile path for the third physics (elastic and
+    TTI cover it in the parametrized suites above): the final depth-(nt%T)
+    tile rebuilds spec/tables with the shallower halo."""
+    nt, T, order = 5, 2, 4
+    shape = (12, 12, 8)
+    grid, rng, vp, damp, dt, g, gr = _geometry(shape, order, nt)
+    m = jnp.asarray(1.0 / vp ** 2, jnp.float32)
+    u0 = jnp.asarray(0.01 * rng.randn(*shape), jnp.float32)
+    u1 = jnp.asarray(0.01 * rng.randn(*shape), jnp.float32)
+    plan = _plan(phys.ACOUSTIC, order, (6, 6), T)
+    (k0, k1), krec = ops.acoustic_tb_propagate(
+        nt, u0, u1, m, damp, g, gr, plan, order, dt, grid.spacing)
+    (r0, r1), rrec = ref.acoustic_reference(
+        nt, u0, u1, m, damp, dt, grid.spacing, order, g=g, receivers=gr)
+    np.testing.assert_allclose(np.asarray(k1), np.asarray(r1),
+                               rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(k0), np.asarray(r0),
+                               rtol=RTOL, atol=ATOL)
+    assert krec.shape == (nt, 3)
+    np.testing.assert_allclose(np.asarray(krec), np.asarray(rrec),
+                               rtol=RTOL, atol=ATOL)
+
+
 def test_elastic_no_sources_no_receivers():
     nt, order = 4, 4
     grid, params, state, dt, _, _ = _elastic_setup(nt=nt)

@@ -102,6 +102,70 @@ def test_autotune_blocks_when_memory_bound():
 
 
 # ---------------------------------------------------------------------------
+# Interconnect term (the sharded outer trapezoid, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def test_exchange_bytes_closed_form():
+    """x exchange: 2 strips (H, by, nz); y exchange on the x-padded block:
+    2 strips (bx + 2H, H, nz) — per exchanged field."""
+    plan = TBPlan((16, 16), T=3, radius=2)  # halo H = 6
+    bx, by, nz, f = 32, 24, 128, 9
+    expect = (2 * 6 * by * nz + 2 * (bx + 12) * 6 * nz) * f * 4
+    assert plan.exchange_bytes_per_tile((bx, by), nz, fields=f) == expect
+
+
+def test_exchange_bytes_grow_with_depth():
+    """Deeper tiles exchange more bytes (the rim grows with H = T*r) but
+    amortize latency: per point-step, the latency share falls as 1/T."""
+    block, nz = (64, 64), 128
+    b2 = TBPlan((16, 16), T=2, radius=2).exchange_bytes_per_tile(block, nz)
+    b8 = TBPlan((16, 16), T=8, radius=2).exchange_bytes_per_tile(block, nz)
+    assert b8 > b2
+    lat2 = TBPlan((16, 16), T=2, radius=2).exchange_seconds_per_point_step(
+        block, nz, 1, link_bw=1e30, link_latency=1.0)
+    lat8 = TBPlan((16, 16), T=8, radius=2).exchange_seconds_per_point_step(
+        block, nz, 1, link_bw=1e30, link_latency=1.0)
+    assert lat8 < lat2 / 3.9
+
+
+def test_mesh_aware_autotune_respects_block():
+    """Plans whose halo or tile exceed the per-device block are infeasible
+    (single-hop neighbor exchange)."""
+    block = (32, 32)
+    plan, log = autotune_plan(nz=128, radius=2, mesh_block=block)
+    assert plan.halo <= min(block)
+    assert plan.tile[0] <= block[0] and plan.tile[1] <= block[1]
+    assert all(TBPlan(t[:2], t[2], 2).halo <= min(block) for t in log)
+    assert all("comm_s" in e for e in log.values())
+
+
+def test_mesh_aware_latency_vs_bandwidth_regimes():
+    """Latency-dominated interconnect -> deep T (amortize the exchange
+    count); bandwidth-starved interconnect -> shallow T (rim bytes grow
+    with the exchange depth) — the multi-chip SO-12 analogue."""
+    kw = dict(nz=128, radius=2, mesh_block=(32, 32))
+    lat_bound, _ = autotune_plan(link_bw=1e30, link_latency=1.0, **kw)
+    bw_bound, _ = autotune_plan(link_bw=1e3, link_latency=0.0, **kw)
+    assert bw_bound.T == 1
+    assert lat_bound.T > bw_bound.T
+
+
+def test_plan_for_physics_mesh_aware():
+    """plan_for_physics prices the exchange with the physics' state-field
+    count (what actually crosses the link: 2 acoustic, 9 elastic)."""
+    kw = dict(nz=128, order=4, mesh_block=(32, 32), link_bw=1e9,
+              link_latency=1e-6)
+    _, log_ac = plan_for_physics("acoustic", **kw)
+    _, log_el = plan_for_physics("elastic", **kw)
+    key = next(k for k in log_ac if k in log_el)
+    assert log_el[key]["comm_s"] > log_ac[key]["comm_s"]
+    # elastic halos are 2x deeper per step: feasible depths shrink
+    el_plan, _ = plan_for_physics("elastic", nz=128, order=4,
+                                  mesh_block=(16, 16))
+    assert el_plan.halo <= 16
+
+
+# ---------------------------------------------------------------------------
 # Per-physics pricing
 # ---------------------------------------------------------------------------
 
