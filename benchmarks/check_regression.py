@@ -1,0 +1,96 @@
+"""CI regression gate over the distributed-scaling trajectory (ROADMAP).
+
+Compares a fresh ``fig12_scaling.py`` run against the committed
+``results/BENCH_dist.json`` and fails when the GEOMETRIC MEAN throughput
+over matching cells drops by more than ``--tol`` (default 15%).  The mean
+— not per-cell — is the gate because the cells are sub-millisecond CPU
+wall-clocks whose individual noise floor exceeds any sane tolerance;
+per-cell ratios are still printed for the log.  Cells are matched on the
+full schedule key (mode, ndev, physics, grid, nt, T, order, inner tile,
+overlap) so baseline refreshes — or a run with ``--overlap`` — simply
+drop out of the comparison instead of being gated against a different
+schedule's numbers; at least one cell must match.
+
+The default 15% assumes fresh and baseline ran on comparable hardware.
+Across machines (the committed baseline vs a shared CI runner) absolute
+throughput is not comparable at that resolution — CI passes ``--tol 0.5``
+so the gate is a tripwire for catastrophic regressions (a lost jit cache,
+an accidentally quadratic path), not a micro-benchmark.
+
+Usage (CI runs exactly this after the fast scaling snapshot):
+
+    PYTHONPATH=src:. python benchmarks/fig12_scaling.py --fast \
+        --out results/BENCH_dist_fresh.json
+    python benchmarks/check_regression.py \
+        --fresh results/BENCH_dist_fresh.json \
+        --baseline results/BENCH_dist.json
+
+Exit codes: 0 pass, 1 regression, 2 nothing comparable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+KEY = ("mode", "ndev", "physics", "grid", "nt", "T", "order",
+       "inner_tile", "overlap")
+
+
+def cell_key(rec: dict):
+    # .get: records from before a schedule field existed key as None and
+    # only match records that also lack it
+    return tuple(tuple(v) if isinstance(v := rec.get(k), list) else v
+                 for k in KEY)
+
+
+def compare(fresh: list, baseline: list, tol: float) -> int:
+    import math
+
+    base = {cell_key(r): r for r in baseline}
+    ratios = []
+    for rec in fresh:
+        k = cell_key(rec)
+        if k not in base:
+            print(f"# new cell (no baseline): {k}")
+            continue
+        ref = base[k]["mpoints_per_s"]
+        got = rec["mpoints_per_s"]
+        ratio = got / ref if ref else float("inf")
+        ratios.append(ratio)
+        print(f"{rec['mode']} ndev={rec['ndev']}: {got:.3f} vs "
+              f"{ref:.3f} Mpts/s ({100 * (ratio - 1):+.1f}%)")
+    if not ratios:
+        print("# no comparable cells between fresh run and baseline",
+              file=sys.stderr)
+        return 2
+    geomean = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
+    print(f"# geomean throughput ratio over {len(ratios)} cells: "
+          f"{geomean:.3f} (gate: >= {1 - tol:.2f})")
+    if geomean < 1.0 - tol:
+        print(f"# REGRESSED: fresh run is {100 * (1 - geomean):.1f}% slower "
+              f"than the committed trajectory (> {tol:.0%})",
+              file=sys.stderr)
+        return 1
+    print("# regression gate PASS")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="JSON from the fresh fig12_scaling run")
+    ap.add_argument("--baseline", default="results/BENCH_dist.json",
+                    help="committed trajectory to gate against")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="allowed fractional slowdown (default 0.15)")
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    return compare(fresh, baseline, args.tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -69,8 +69,10 @@ def main():
     # --- temporally blocked (the paper's scheme, Pallas kernel) ------------
     plan, _ = autotune_plan(nz=shape[2], radius=order // 2,
                             tiles=(16, 32), depths=(2, 4))
+    from repro.core.temporal_blocking import PHYSICS_COSTS
+    ac_fields = PHYSICS_COSTS["acoustic"].fields
     print(f"autotuned plan: tile={plan.tile} T={plan.T} "
-          f"(VMEM {plan.vmem_bytes(shape[2])/2**20:.1f} MiB)")
+          f"(VMEM {plan.vmem_bytes(shape[2], ac_fields)/2**20:.1f} MiB)")
     u0 = jnp.zeros(shape, jnp.float32)
     t0 = time.time()
     (tb0, tb1), tb_recs = ops.acoustic_tb_propagate(

@@ -14,7 +14,10 @@ Three layers:
    by the autotuner (`benchmarks/table1_autotune.py`) and §Roofline — plus
    the interconnect term of the sharded outer trapezoid (exchange bytes and
    latency per depth-T tile, DESIGN.md §4), which makes `plan_for_physics`
-   mesh-aware via `mesh_block`/`link_bw`/`link_latency`.
+   mesh-aware via `mesh_block`/`link_bw`/`link_latency`.  With a mesh
+   block the sweep is the JOINT two-level search (`plan_hierarchy` →
+   `HierPlan`): inner Pallas tile (VMEM window) x outer exchange depth
+   (per-field exchange bytes/latency) x overlapped-vs-serialized exchange.
 """
 from __future__ import annotations
 
@@ -125,9 +128,13 @@ class TBPlan:
             tot += (tx + 2 * m) * (ty + 2 * m)
         return tot / (self.T * tx * ty)
 
-    def vmem_bytes(self, nz: int, fields: int = 5, dtype_bytes: int = 4) -> int:
-        """Resident bytes: `fields` window-sized buffers (u0, u1, m, damp,
-        scratch for the acoustic kernel)."""
+    def vmem_bytes(self, nz: int, fields: int, dtype_bytes: int = 4) -> int:
+        """Resident bytes: `fields` window-sized buffers.
+
+        `fields` is deliberately required: the historical default of 5 was
+        the acoustic kernel's window count (u0, u1, m, damp, scratch) and
+        silently mis-budgeted TTI (11 windows) and elastic (14).  Callers
+        take the count from `PHYSICS_COSTS[physics].fields`."""
         wx, wy, wz = self.window(nz)
         return wx * wy * wz * dtype_bytes * fields
 
@@ -146,29 +153,59 @@ class TBPlan:
 
     def exchange_bytes_per_tile(self, block: Tuple[int, int], nz: int,
                                 fields: int = 1,
-                                dtype_bytes: int = 4) -> int:
+                                dtype_bytes: int = 4,
+                                depths: Tuple[int, ...] = None) -> int:
         """Bytes a shard with local block (bx, by) sends per depth-T time
-        tile: the x exchange moves two (H, by, nz) strips, the y exchange
-        two (bx + 2H, H, nz) strips of the already-x-padded block (corners
-        ride the second hop), per exchanged field."""
+        tile: the x exchange moves two (d, by, nz) strips, the y exchange
+        two (bx + 2d, d, nz) strips of the already-x-padded block (corners
+        ride the second hop), per exchanged field.
+
+        `depths` (optional) gives a per-field exchange depth instead of the
+        uniform `halo` — the elastic/TTI per-field-halo saving (DESIGN.md
+        §4): fields only read pointwise at the rim ship a shallower strip
+        (`TBPhysics.field_halo_depths`); `fields` is ignored when given."""
         bx, by = block
-        h = self.halo
-        return 2 * h * nz * (by + bx + 2 * h) * fields * dtype_bytes
+        if depths is None:
+            depths = (self.halo,) * fields
+        return sum(2 * d * nz * (by + bx + 2 * d) * dtype_bytes
+                   for d in depths)
 
     def exchange_seconds_per_point_step(self, block: Tuple[int, int],
                                         nz: int, fields: int,
                                         link_bw: float,
                                         link_latency: float,
-                                        dtype_bytes: int = 4) -> float:
+                                        dtype_bytes: int = 4,
+                                        depths: Tuple[int, ...] = None
+                                        ) -> float:
         """Interconnect time per grid-point-timestep of one shard: one deep
         exchange (4 ppermute shifts per field: 2 axes x 2 directions)
         amortized over the T steps it buys — the multi-chip analogue of
         `hbm_bytes_per_point_step`.  Deeper T trades a linear growth in rim
-        bytes against a 1/T drop in per-exchange latency."""
+        bytes against a 1/T drop in per-exchange latency.  With per-field
+        `depths`, zero-depth fields skip their ppermute rounds entirely."""
         bx, by = block
-        byts = self.exchange_bytes_per_tile(block, nz, fields, dtype_bytes)
-        coll = 4 * fields * link_latency
+        byts = self.exchange_bytes_per_tile(block, nz, fields, dtype_bytes,
+                                            depths=depths)
+        n_exchanged = (fields if depths is None
+                       else sum(1 for d in depths if d > 0))
+        coll = 4 * n_exchanged * link_latency
         return (byts / link_bw + coll) / (bx * by * nz * self.T)
+
+    def split_step_overhead_per_point_step(self, block: Tuple[int, int],
+                                           nz: int, r_step: int,
+                                           flops_per_point: float,
+                                           peak_flops: float) -> float:
+        """Extra redundant compute of the overlapped exchange (DESIGN.md
+        §4): the first in-tile step is split into an interior update (runs
+        while the ppermute is in flight) plus four rim strips of width
+        `halo + 2*r_step` recomputed once the halo lands.  The strips are
+        the overlap's price; this returns their cost per point-step."""
+        bx, by = block
+        h = self.halo
+        band = h + 2 * r_step
+        strip_pts = 2 * band * ((bx + 2 * h) + (by + 2 * h)) * nz
+        return strip_pts * flops_per_point / (peak_flops * bx * by * nz
+                                              * self.T)
 
 
 def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
@@ -180,29 +217,46 @@ def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
                   mesh_block: Tuple[int, int] = None,
                   link_bw: float = 45e9, link_latency: float = 1.5e-6,
                   exchange_fields: int = None,
+                  exchange_lags: Tuple[int, ...] = None,
+                  sweep_overlap: bool = False,
                   ) -> Tuple[TBPlan, dict]:
-    """Pick (tile, T) minimizing modeled time/point-step under the VMEM cap —
-    the TPU collapse of the paper's Table-I autotuning sweep.
+    """Pick (tile, T[, overlap]) minimizing modeled time/point-step under
+    the VMEM cap — the TPU collapse of the paper's Table-I autotuning
+    sweep, extended to the two-level sharded hierarchy (DESIGN.md §4).
 
-    time/point-step = max(compute, memory[, interconnect]):
+    Single-device terms:
       compute      = overlap_factor * flops_per_point / peak_flops
       memory       = hbm_bytes_per_point_step / hbm_bw
-      interconnect = exchange_seconds_per_point_step (only when `mesh_block`
-                     is given: the sharded schedule's one depth-H exchange
-                     per tile over per-device blocks of (bx, by) — plans
-                     whose halo or tile exceed the block are infeasible)
+
+    With `mesh_block` the sweep becomes the JOINT two-level search: the
+    candidate tile is the *inner* Pallas tile (VMEM window priced at this
+    level; tiles that don't divide the per-device block, or halos deeper
+    than the block, are infeasible), while the exchange term prices the
+    *outer* per-shard trapezoid (one depth-T*radius ppermute round per
+    tile over blocks of (bx, by)):
+
+      serialized   = max(compute, memory) + comm        (exchange blocks
+                     the tile's compute — the non-overlapped schedule)
+      overlapped   = max(max(compute, memory), comm) + split_overhead
+                     (the first in-tile step splits into interior + rim
+                     strips so the ppermute hides behind the interior;
+                     the strips are redundant compute — only swept when
+                     `sweep_overlap`)
 
     T=1 (no temporal blocking) is in the sweep, so kernels where TB cannot
     win (high space order: overlap growth beats traffic savings — the
     paper's SO-12 result) autotune back to the spatially-blocked schedule.
-    With `mesh_block`, a latency-dominated interconnect pushes toward deep
-    T (fewer exchanges) while a bandwidth-starved one pushes back to
-    shallow T (the rim bytes grow with the exchange depth) — the
-    multi-chip analogue of the same trade.
+    A latency-dominated interconnect pushes toward deep T (fewer
+    exchanges) while a bandwidth-starved one pushes back to shallow T (rim
+    bytes grow with the exchange depth) — the multi-chip analogue of the
+    same trade.
 
     `exchange_fields` (default `write_fields`) is how many state fields
-    cross the link per exchange; `link_bw`/`link_latency` default to one
-    ICI link (~45 GB/s).
+    cross the link per exchange; `exchange_lags` (optional, per exchanged
+    field, in grid points) prices the per-field exchange depths
+    `max(halo - lag, 0)` — fields only read pointwise at the rim ship a
+    shallower strip.  `link_bw`/`link_latency` default to one ICI link
+    (~45 GB/s).
     """
     read_fields = fields - 1 if read_fields is None else read_fields
     write_fields = 1 if write_fields is None else write_fields
@@ -217,8 +271,9 @@ def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
                     continue
                 if mesh_block is not None and (
                         plan.halo > min(mesh_block)
-                        or tx > mesh_block[0] or ty > mesh_block[1]):
-                    continue  # infeasible on the per-device block
+                        or tx > mesh_block[0] or ty > mesh_block[1]
+                        or mesh_block[0] % tx or mesh_block[1] % ty):
+                    continue  # infeasible inner tile on the device block
                 comp = plan.overlap_factor() * flops_per_point / peak_flops
                 mem = plan.hbm_bytes_per_point_step(
                     nz, read_fields=read_fields, write_fields=write_fields,
@@ -227,11 +282,31 @@ def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
                          "overlap": plan.overlap_factor()}
                 cost = max(comp, mem)
                 if mesh_block is not None:
+                    field_depths = None
+                    if exchange_lags is not None:
+                        field_depths = tuple(max(plan.halo - lag, 0)
+                                             for lag in exchange_lags)
+                        entry["field_depths"] = field_depths
                     comm = plan.exchange_seconds_per_point_step(
                         mesh_block, nz, exchange_fields, link_bw,
-                        link_latency, dtype_bytes=dtype_bytes)
+                        link_latency, dtype_bytes=dtype_bytes,
+                        depths=field_depths)
                     entry["comm_s"] = comm
-                    cost = max(cost, comm)
+                    entry["exchange_bytes"] = plan.exchange_bytes_per_tile(
+                        mesh_block, nz, exchange_fields, dtype_bytes,
+                        depths=field_depths)
+                    serial = max(cost, 0.0) + comm
+                    entry["overlap_exchange"] = False
+                    if sweep_overlap:
+                        split = plan.split_step_overhead_per_point_step(
+                            mesh_block, nz, radius, flops_per_point,
+                            peak_flops)
+                        overlapped = max(cost, comm) + split
+                        entry["split_s"] = split
+                        if overlapped < serial:
+                            entry["overlap_exchange"] = True
+                            serial = overlapped
+                    cost = serial
                 entry["cost_s"] = cost
                 log[(tx, ty, T)] = entry
                 if cost < best_cost:
@@ -261,6 +336,14 @@ class PhysicsCost:
                    velocities) and TTI (two first-derivative passes).
     flops_per_point: order -> useful FLOPs per grid-point-timestep, taken
                    from the matching propagator's `model_flops_per_step`.
+    halo_lag_units: per-state-field exchange-depth reduction in units of
+                   order//2 — fields the update only reads pointwise at
+                   the rim (previous-time-level copies; the elastic
+                   velocities, whose fresh values feed the stress
+                   derivatives before the rim garbage front reaches them)
+                   provably ship a shallower halo strip: depth =
+                   max(T*r_step - lag*(order//2), 0).  Mirrors
+                   `kernels.tb_physics.TBPhysics.halo_lags`.
 
     These counts mirror `kernels.tb_physics.PHYSICS` (kept numeric here so
     core never imports kernels); a cross-check test in
@@ -273,6 +356,7 @@ class PhysicsCost:
     evolved_fields: int
     radius_mult: int
     flops_per_point: Callable[[int], float]
+    halo_lag_units: Tuple[int, ...] = ()
 
     @property
     def fields(self) -> int:
@@ -292,6 +376,11 @@ class PhysicsCost:
     def step_radius(self, order: int) -> int:
         return self.radius_mult * (order // 2)
 
+    def exchange_lags(self, order: int) -> Tuple[int, ...]:
+        """Per-state-field exchange-depth reductions in grid points."""
+        lags = self.halo_lag_units or (0,) * self.state_fields
+        return tuple(lag * (order // 2) for lag in lags)
+
 
 def _flops(propagator: str):
     def f(order: int) -> float:
@@ -302,15 +391,21 @@ def _flops(propagator: str):
 
 
 PHYSICS_COSTS = {
+    # halo_lag_units order matches the TBPhysics state_fields order:
+    # acoustic (u_prev, u); tti (p, p_prev, r, r_prev);
+    # elastic (vx, vy, vz, txx, tyy, tzz, txy, txz, tyz).
     "acoustic": PhysicsCost("acoustic", state_fields=2, param_fields=2,
                             evolved_fields=1, radius_mult=1,
-                            flops_per_point=_flops("acoustic")),
+                            flops_per_point=_flops("acoustic"),
+                            halo_lag_units=(1, 0)),
     "tti": PhysicsCost("tti", state_fields=4, param_fields=6,
                        evolved_fields=2, radius_mult=2,
-                       flops_per_point=_flops("tti")),
+                       flops_per_point=_flops("tti"),
+                       halo_lag_units=(0, 2, 0, 2)),
     "elastic": PhysicsCost("elastic", state_fields=9, param_fields=4,
                            evolved_fields=9, radius_mult=2,
-                           flops_per_point=_flops("elastic")),
+                           flops_per_point=_flops("elastic"),
+                           halo_lag_units=(1, 1, 1, 0, 0, 0, 0, 0, 0)),
 }
 
 
@@ -328,15 +423,94 @@ def plan_for_physics(physics: str, nz: int, order: int, **kwargs
     schedule.
 
     Passing `mesh_block=(bx, by)` (the per-device block of the sharded
-    layer in `distributed/halo.py`) makes the sweep mesh-aware: the
-    interconnect term prices the one depth-`T*r` exchange per tile with
-    this physics' state-field count (what actually crosses the link), and
-    plans that don't fit the block are dropped.
+    layer in `distributed/halo.py`) makes the sweep the joint two-level
+    search of DESIGN.md §4: the candidate tile is the *inner* Pallas tile
+    (must divide the block), the interconnect term prices the one
+    deep exchange per tile with this physics' state-field count and
+    per-field depths (`halo_lag_units` — what actually crosses the link),
+    and `sweep_overlap=True` adds the overlapped-exchange schedule to the
+    sweep.
     """
     pc = PHYSICS_COSTS[physics]
     args = dict(fields=pc.fields, read_fields=pc.read_fields,
                 write_fields=pc.write_fields,
                 exchange_fields=pc.state_fields,
+                exchange_lags=pc.exchange_lags(order),
                 flops_per_point=pc.flops_per_point(order))
     args.update(kwargs)
     return autotune_plan(nz, pc.step_radius(order), **args)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical two-level plan (outer shard trapezoid x inner Pallas tile)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HierPlan:
+    """Joint two-level temporal-blocking plan for one shard (DESIGN.md §4).
+
+    inner:         the Pallas-tile plan *inside* the per-device block —
+                   `inner.T` is also the outer exchange depth (one
+                   `pallas_call` advances the whole exchanged block T
+                   steps, so the levels share the time depth).
+    block:         the per-device (bx, by) block the outer trapezoid
+                   exchanges around.
+    overlap:       whether the first in-tile step runs as the split
+                   interior/rim schedule so the deep ppermute hides behind
+                   interior compute.
+    field_depths:  per-state-field exchange depths (grid points) — the
+                   per-field-halo saving; uniform depth is `halo`.
+    """
+
+    inner: TBPlan
+    block: Tuple[int, int]
+    overlap: bool
+    field_depths: Tuple[int, ...]
+
+    @property
+    def T(self) -> int:
+        return self.inner.T
+
+    @property
+    def halo(self) -> int:
+        return self.inner.halo
+
+    def exchange_bytes(self, nz: int, dtype_bytes: int = 4) -> int:
+        """Bytes per deep exchange with the per-field depths."""
+        return self.inner.exchange_bytes_per_tile(
+            self.block, nz, dtype_bytes=dtype_bytes,
+            depths=self.field_depths)
+
+    def exchange_bytes_uniform(self, nz: int, dtype_bytes: int = 4) -> int:
+        """The uniform-depth baseline the per-field scheme is priced
+        against."""
+        return self.inner.exchange_bytes_per_tile(
+            self.block, nz, fields=len(self.field_depths),
+            dtype_bytes=dtype_bytes)
+
+
+def plan_hierarchy(physics: str, nz: int, order: int,
+                   block: Tuple[int, int], **kwargs
+                   ) -> Tuple[HierPlan, dict]:
+    """Jointly autotune the outer exchange depth, inner Pallas tile and
+    overlap choice for one per-device block — the hierarchical search the
+    parameterised time-tiling literature (Kukreja et al., PAPERS.md) shows
+    must not be done level-by-level.
+
+    Thin wrapper over `plan_for_physics(..., mesh_block=block,
+    sweep_overlap=True)` that re-packages the winning sweep entry as a
+    `HierPlan`; `distributed/halo.py` turns it into a `DistTBPlan` via
+    `dist_plan_from_hier`.
+    """
+    kwargs.setdefault("sweep_overlap", True)
+    plan, log = plan_for_physics(physics, nz, order, mesh_block=block,
+                                 **kwargs)
+    pc = PHYSICS_COSTS[physics]
+    entry = log[(plan.tile[0], plan.tile[1], plan.T)]
+    depths = entry.get("field_depths",
+                       tuple(max(plan.halo - lag, 0)
+                             for lag in pc.exchange_lags(order)))
+    return (HierPlan(inner=plan, block=(int(block[0]), int(block[1])),
+                     overlap=bool(entry.get("overlap_exchange", False)),
+                     field_depths=tuple(depths)),
+            log)

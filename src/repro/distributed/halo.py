@@ -6,15 +6,35 @@ whichever shard owns (or halos) the affected points, so a time tile of depth
 T needs exactly ONE neighbor exchange of depth H = T*r_step — temporal
 blocking applied to communication.  Redundant rim compute on each device
 buys a T-fold reduction in exchange count, the multi-chip analogue of the
-VMEM trapezoid in `kernels/stencil_tb.py`; the two trapezoids nest:
+VMEM trapezoid in `kernels/stencil_tb.py`; the two trapezoids nest as ONE
+hierarchical plan (`DistTBPlan` carrying an inner `core.TBPlan`, searched
+jointly by `core.temporal_blocking.plan_hierarchy`):
 
-    outer trapezoid   shard block + depth-H exchanged halo, advanced T steps
-                      between `lax.ppermute` rounds (this module)
-    inner trapezoid   the per-shard schedule — either the Pallas TB kernel
-                      (`stencil_tb.tb_time_tile`, `inner="pallas"`) tiling
-                      the shard block, or its jnp oracle (`inner="jnp"`,
-                      the same `tb_physics.TBPhysics.update` the kernel
-                      unrolls, on the whole exchanged block)
+    outer trapezoid   shard block + deep exchanged halo, advanced T steps
+                      between `lax.ppermute` rounds (this module).  The
+                      exchange is PER-FIELD deep: fields the update only
+                      reads pointwise at the rim (u_prev/p_prev/r_prev,
+                      the elastic velocities) ship a provably shallower
+                      strip (`TBPhysics.field_halo_depths`), zero-padded
+                      back to the uniform window — fewer exchange bytes
+                      with bit-identical valid centres.
+    inner trapezoid   the per-shard schedule over the exchanged block,
+                      spatially tiled by `inner_plan.tile`: either the
+                      Pallas TB kernel (`stencil_tb.tb_time_tile`,
+                      `inner="pallas"`, one kernel grid of block/tile
+                      windows per tile — the shard's `dom_pad` and tile
+                      offsets compose inside the kernel's window DMA) or
+                      its jnp oracle (`inner="jnp"`), which loops the SAME
+                      per-window schedule in pure jnp.
+
+With `overlap=True` the deep exchange is double-buffered against compute:
+the first in-tile step splits into an interior update of the un-exchanged
+local block (data-independent of the ppermute, so XLA's latency-hiding
+scheduler can run the exchange underneath it) plus four rim strips of
+width `H + 2*r_step` recomputed once the halo lands; steps 2..T then run
+through the inner executor on the stitched state at depth `H - r_step`.
+The strips are the overlap's price — `plan_hierarchy` decides when paying
+it beats serializing the exchange.
 
 Everything physics-specific comes from the *same* `tb_physics.TBPhysics`
 step specs that `kernels/ops._tb_propagate` uses, so one driver advances
@@ -22,26 +42,24 @@ acoustic (2 state fields), TTI (4) and elastic (9) — there is no
 per-physics distributed stencil loop to keep in sync.
 
 Source/receiver handling is the paper's §II machinery sharded by owner:
-`sources.tile_source_tables` / `tile_receiver_tables` with tile = the shard
-block bin every affected point (sources duplicated into any window whose
-halo contains them, paper Fig. 4b) and every receiver gather entry into the
-owning shard; each shard records *partial* per-step receiver samples which
-the driver segment-sums by receiver id (`ops.combine_rec_partials`) — so
-receiver traces are per-step at any T, and `nt % T != 0` runs a shallower
-remainder tile exactly like the single-device driver.
+`sources.tile_source_tables` / `tile_receiver_tables` binned at the INNER
+tile granularity (tile = `inner_plan.tile`, every affected point duplicated
+into any window whose halo contains it, paper Fig. 4b) and every receiver
+gather entry into the owning tile; each shard records *partial* per-step
+receiver samples which the driver segment-sums by receiver id
+(`ops.combine_rec_partials`) — so receiver traces are per-step at any T,
+and `nt % T != 0` runs a shallower remainder tile exactly like the
+single-device driver.
 
 Mesh layout: grid x -> "data" axis, grid y -> "model" axis.  Exchanges are
 `lax.ppermute` shifts; missing neighbors (domain boundary) produce zeros =
 the Dirichlet convention shared by the reference and the Pallas kernel, and
 out-of-domain cells are re-masked every in-block step (param fields carry
 their physics' `param_fills` there so updates stay finite).
-
-Overlap note: within a time tile the first local step only needs the halo
-for its outermost r_step cells; XLA's latency-hiding scheduler can overlap
-the ppermute with interior compute.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, NamedTuple, Optional, Tuple
 
@@ -55,6 +73,7 @@ except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.core import sources as src_mod
+from repro.core.temporal_blocking import HierPlan, TBPlan
 from repro.kernels import ops as ops_mod
 from repro.kernels import tb_physics as phys
 
@@ -103,6 +122,20 @@ def halo_exchange_2d(x, h: int, ax_x: str, ax_y: str):
     return halo_exchange(x, h, ax_y, 1)
 
 
+def exchange_to_depth(x, depth: int, h: int, ax_x: str, ax_y: str):
+    """Exchange a depth-`depth` halo, then zero-pad out to the uniform
+    window depth `h` — the per-field deep exchange (DESIGN.md §4).  Cells
+    in the zero band are only ever read into values the trapezoid discards
+    (`TBPhysics.halo_lags` is derived from exactly that dependency cone);
+    `depth == 0` skips the ppermute rounds entirely."""
+    if depth > 0:
+        x = halo_exchange_2d(x, depth, ax_x, ax_y)
+    if h > depth:
+        pad = h - depth
+        x = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    return x
+
+
 class _StepSpec(NamedTuple):
     """The slice of `TBKernelSpec` a `TBPhysics.update` actually reads."""
 
@@ -112,7 +145,15 @@ class _StepSpec(NamedTuple):
 
 
 class DistTBPlan(NamedTuple):
-    """Static setup for the sharded temporally-blocked propagator."""
+    """Static setup for the sharded temporally-blocked propagator.
+
+    `inner_plan` is the inner level of the two-level hierarchy: its tile
+    spatially tiles the shard block inside the per-shard schedule (both
+    executors), and its T must equal the outer exchange depth `T` (one
+    inner pass advances the whole exchanged block T steps).  `None` means
+    one tile covering the block.  Build from the joint autotuner with
+    `dist_plan_from_hier`.
+    """
 
     mesh: Mesh
     grid_shape: Tuple[int, int, int]
@@ -123,7 +164,10 @@ class DistTBPlan(NamedTuple):
     spacing: Tuple[float, float, float] = (10.0, 10.0, 10.0)
     ax_x: str = "data"
     ax_y: str = "model"
-    inner: str = "jnp"          # per-shard schedule: "jnp" | "pallas"
+    inner: str = "jnp"          # per-shard executor: "jnp" | "pallas"
+    inner_plan: Optional[TBPlan] = None
+    overlap: bool = False       # overlapped (split-first-step) exchange
+    per_field_halo: bool = True  # per-field exchange depths (halo_lags)
 
     @property
     def r_step(self) -> int:
@@ -144,6 +188,20 @@ class DistTBPlan(NamedTuple):
         px, py = self.pgrid
         return (self.grid_shape[0] // px, self.grid_shape[1] // py)
 
+    @property
+    def inner_tile(self) -> Tuple[int, int]:
+        """Spatial tile of the inner trapezoid (the whole block if no
+        inner plan was set)."""
+        return self.inner_plan.tile if self.inner_plan is not None \
+            else self.block
+
+    def field_depths(self, T_depth: int) -> Tuple[int, ...]:
+        """Per-state-field exchange depth for a depth-`T_depth` tile."""
+        if not self.per_field_halo:
+            h = T_depth * self.r_step
+            return (h,) * len(self.physics.state_fields)
+        return self.physics.field_halo_depths(T_depth, self.order)
+
     def validate(self):
         nx, ny, _ = self.grid_shape
         px, py = self.pgrid
@@ -158,6 +216,31 @@ class DistTBPlan(NamedTuple):
                 f"T*r_step <= block — lower T or use a coarser decomposition")
         if self.inner not in ("jnp", "pallas"):
             raise ValueError(f"unknown inner schedule {self.inner!r}")
+        if self.inner_plan is not None:
+            itx, ity = self.inner_plan.tile
+            if bx % itx or by % ity:
+                raise ValueError(
+                    f"inner tile {self.inner_plan.tile} must divide the "
+                    f"shard block ({bx}, {by})")
+            if self.inner_plan.T != self.T:
+                raise ValueError(
+                    f"inner plan depth T={self.inner_plan.T} must equal the "
+                    f"outer exchange depth T={self.T} (one inner pass per "
+                    f"deep exchange)")
+
+
+def dist_plan_from_hier(mesh: Mesh, grid_shape: Tuple[int, int, int],
+                        physics: phys.TBPhysics, order: int,
+                        hier: HierPlan, dt: float,
+                        spacing: Tuple[float, float, float],
+                        inner: str = "pallas", **kwargs) -> DistTBPlan:
+    """Turn a jointly-autotuned `core.temporal_blocking.HierPlan` into the
+    executable `DistTBPlan` (outer T and exchange overlap from the outer
+    level, spatial tile from the inner level)."""
+    return DistTBPlan(mesh=mesh, grid_shape=grid_shape, physics=physics,
+                      order=order, T=hier.T, dt=dt, spacing=spacing,
+                      inner=inner, inner_plan=hier.inner,
+                      overlap=hier.overlap, **kwargs)
 
 
 def _local_domain_mask(plan: DistTBPlan, h: int, shape_local, dtype):
@@ -177,14 +260,14 @@ def _local_domain_mask(plan: DistTBPlan, h: int, shape_local, dtype):
 # Per-shard inner trapezoids
 # ---------------------------------------------------------------------------
 
-def _jnp_shard_tile(physics: phys.TBPhysics, sspec: _StepSpec, T: int, h: int,
-                    state_pads, param_pads, dom, s_coords, s_vals,
-                    r_coords, r_w):
-    """T in-block timesteps on the halo-padded shard — the jnp oracle of the
-    Pallas kernel's unrolled loop (`stencil_tb._tb_kernel`), sharing the
+def _jnp_window_tile(physics: phys.TBPhysics, sspec: _StepSpec, T: int,
+                     h: int, state_pads, param_pads, dom, s_coords, s_vals,
+                     r_coords, r_w):
+    """T in-window timesteps on one halo-padded window — the jnp oracle of
+    the Pallas kernel's unrolled loop (`stencil_tb._tb_kernel`), sharing the
     same `physics.update` / mask / inject / record sequence.
 
-    Returns (cropped state tuple, rec partials (T, capr, rec_channels)).
+    Returns (cropped centre tuple, rec partials (T, capr, rec_channels)).
     """
     state = dict(zip(physics.state_fields, state_pads))
     params = dict(zip(physics.param_fields, param_pads))
@@ -212,29 +295,178 @@ def _jnp_shard_tile(physics: phys.TBPhysics, sspec: _StepSpec, T: int, h: int,
             jnp.stack(recs, axis=0))
 
 
-def _pallas_shard_tile(plan: DistTBPlan, T: int, h: int, state_pads,
-                       param_pads, dom, s_coords, s_vals, r_coords, r_w,
-                       interpret: bool):
-    """Run the shard's inner trapezoid through the actual Pallas TB kernel:
-    the shard block is the kernel's grid (one spatial tile covering it) and
-    the shard's exchanged halo plays the role of the kernel's zero padding,
-    with the domain mask supplied externally (it depends on the shard
-    offset, which the kernel spec cannot know statically)."""
-    from repro.kernels import stencil_tb as ker
+def _run_inner(plan: DistTBPlan, T_steps: int, h_in: int, state_pads,
+               param_pads, dom, s_coords, s_vals, r_coords, r_w,
+               interpret: bool):
+    """Advance the exchanged shard block `T_steps` steps through the inner
+    trapezoid, spatially tiled by `plan.inner_tile`.
 
+    Tables are per inner tile: s_coords (ntiles, cap, 3) window-local,
+    s_vals (ntiles, T_steps, cap), r_coords/r_w likewise.  Returns
+    (state blocks tuple, rec partials (ntx, nty, T_steps, capr, chan)).
+    """
+    physics = plan.physics
+    itx, ity = plan.inner_tile
     wx, wy, nz = state_pads[0].shape
-    bx, by = wx - 2 * h, wy - 2 * h
-    spec = ker.TBKernelSpec(
-        nx=bx, ny=by, nz=nz, tile=(bx, by), T=T, order=plan.order,
-        dt=float(plan.dt), spacing=tuple(float(s) for s in plan.spacing),
-        src_cap=s_coords.shape[0], rec_cap=r_coords.shape[0],
-        dtype=state_pads[0].dtype, step_radius=plan.r_step,
-        rec_channels=plan.physics.rec_channels)
-    new, rec = ker.tb_time_tile(
-        spec, plan.physics, state_pads, param_pads,
-        s_coords[None], s_vals[None], r_coords[None], r_w[None],
-        dom_pad=dom, interpret=interpret)
-    return new, rec.reshape(T, r_coords.shape[0], plan.physics.rec_channels)
+    bx, by = wx - 2 * h_in, wy - 2 * h_in
+    ntx, nty = bx // itx, by // ity
+    if plan.inner == "pallas":
+        # One pallas_call whose grid tiles the exchanged block; the shard's
+        # dom_pad rides along as one more HBM window and is sliced at the
+        # same per-tile window origin as the fields (stencil_tb).
+        from repro.kernels import stencil_tb as ker
+        spec = ops_mod.make_inner_spec(
+            (bx, by), nz, (itx, ity), T_steps, plan.order, float(plan.dt),
+            tuple(float(s) for s in plan.spacing), s_coords.shape[1],
+            r_coords.shape[1], state_pads[0].dtype, physics)
+        new, rec = ker.tb_time_tile(
+            spec, physics, state_pads, param_pads, s_coords, s_vals,
+            r_coords, r_w, dom_pad=dom, interpret=interpret)
+        return new, rec
+    # jnp oracle: the SAME per-window schedule as the kernel grid, looped
+    # in pure jnp (ntx*nty windows, each with its own trapezoidal halo)
+    sspec = _StepSpec(float(plan.dt), tuple(float(s) for s in plan.spacing),
+                      plan.order)
+    outs = [jnp.zeros((bx, by, nz), p.dtype) for p in state_pads]
+    rec_rows = []
+    for ti in range(ntx):
+        row = []
+        for tj in range(nty):
+            k = ti * nty + tj
+            slx = slice(ti * itx, ti * itx + itx + 2 * h_in)
+            sly = slice(tj * ity, tj * ity + ity + 2 * h_in)
+            wpads = tuple(p[slx, sly] for p in state_pads)
+            wpar = tuple(p[slx, sly] for p in param_pads)
+            new, rec = _jnp_window_tile(
+                physics, sspec, T_steps, h_in, wpads, wpar, dom[slx, sly],
+                s_coords[k], s_vals[k], r_coords[k], r_w[k])
+            for i, centre in enumerate(new):
+                outs[i] = outs[i].at[ti * itx:(ti + 1) * itx,
+                                     tj * ity:(tj + 1) * ity, :].set(centre)
+            row.append(rec)
+        rec_rows.append(jnp.stack(row, axis=0))
+    return tuple(outs), jnp.stack(rec_rows, axis=0)
+
+
+def _split_first_step(plan: DistTBPlan, sspec: _StepSpec, h: int,
+                      state_blocks, state_pads, param_pads, dom,
+                      s_coords, s_vals0, r_coords, r_w):
+    """The overlapped first step of a deep tile (DESIGN.md §4).
+
+    The exchanged halo is only needed within `h + r_step` of the window
+    edge at step 1, so the step splits into:
+
+      interior   `physics.update` on the zero-padded LOCAL block — no data
+                 dependency on the ppermute, so XLA can run the exchange
+                 underneath it; valid at >= h + r_step from the window edge.
+      rim strips four band updates of width `h + 2*r_step` sliced from the
+                 exchanged window, each valid (after an r_step crop at cut
+                 edges) over the rim the interior cannot cover.
+
+    Stitching writes the strips over the interior result; the assembled
+    state carries the standard trapezoid contract (garbage only within
+    r_step of the window edge).  Injection and receiver partials then run
+    exactly as in `_jnp_window_tile`'s k = 0, on SHARD-level tables.
+
+    Returns (stitched padded state tuple, rec partials (1, capr, chan)).
+    """
+    physics = plan.physics
+    r = plan.r_step
+    sd = dict(zip(physics.state_fields, state_pads))
+    pd = dict(zip(physics.param_fields, param_pads))
+    wx, wy = state_pads[0].shape[0], state_pads[0].shape[1]
+    bx = wx - 2 * h
+
+    def upd(slx, sly):
+        st_ = {f: a[slx, sly] for f, a in sd.items()}
+        pr_ = {f: a[slx, sly] for f, a in pd.items()}
+        dm = dom[slx, sly]
+        return physics.update(st_, pr_, sspec, lambda a: a * dm)
+
+    # interior: independent of the exchange (zero-padded local block)
+    interior = {f: jnp.pad(b, ((h, h), (h, h), (0, 0)))
+                for f, b in zip(physics.state_fields, state_blocks)}
+    out = physics.update(interior, pd, sspec, lambda a: a * dom)
+
+    band = h + 2 * r
+    xlo = upd(slice(0, band), slice(None))
+    xhi = upd(slice(wx - band, wx), slice(None))
+    for f in out:
+        out[f] = out[f].at[:h + r].set(xlo[f][:h + r])
+        out[f] = out[f].at[wx - h - r:].set(xhi[f][r:])
+    if bx > 2 * r:  # middle x range exists: cover its y rims
+        ylo = upd(slice(h, wx - h), slice(0, band))
+        yhi = upd(slice(h, wx - h), slice(wy - band, wy))
+        for f in out:
+            out[f] = out[f].at[h + r:wx - h - r, :h + r].set(
+                ylo[f][r:bx - r, :h + r])
+            out[f] = out[f].at[h + r:wx - h - r, wy - h - r:].set(
+                yhi[f][r:bx - r, r:])
+
+    # post-step sequence of _jnp_window_tile, k = 0
+    for f in physics.evolved_fields:
+        if f not in physics.premasked_fields:
+            out[f] = out[f] * dom
+    sx, sy, sz = s_coords[:, 0], s_coords[:, 1], s_coords[:, 2]
+    for f in physics.inject_fields:
+        out[f] = out[f].at[sx, sy, sz].add(s_vals0.astype(out[f].dtype))
+    rx, ry, rz = r_coords[:, 0], r_coords[:, 1], r_coords[:, 2]
+    rec = jnp.stack([(arr[rx, ry, rz] * r_w).astype(arr.dtype)
+                     for arr in physics.record(out)], axis=-1)
+    return (tuple(out[f] for f in physics.state_fields), rec[None])
+
+
+# ---------------------------------------------------------------------------
+# Host-side table sharding
+# ---------------------------------------------------------------------------
+
+def _shard_table(arr, px: int, py: int, ntx_loc: int, nty_loc: int):
+    """(ntx_glob*nty_glob, ...) host table -> (px, py, ntiles_loc, ...):
+    global row-major tile order is (shard_x, tile_x, shard_y, tile_y)."""
+    lead = arr.shape[1:]
+    a = arr.reshape(px, ntx_loc, py, nty_loc, *lead)
+    a = jnp.transpose(a, (0, 2, 1, 3) + tuple(range(4, 4 + len(lead))))
+    return a.reshape(px, py, ntx_loc * nty_loc, *lead)
+
+
+def _global_partials(parts, px: int, py: int, ntx_loc: int, nty_loc: int):
+    """(px, py, ntx_loc, nty_loc, T, cap, chan) shard partials back to the
+    (ntx_glob, nty_glob, T, cap, chan) layout `ops.combine_rec_partials`
+    expects against the global receiver table."""
+    T, cap, chan = parts.shape[4:]
+    a = jnp.transpose(parts, (0, 2, 1, 3, 4, 5, 6))
+    return a.reshape(px * ntx_loc, py * nty_loc, T, cap, chan)
+
+
+def _inner_source_tables(plan: DistTBPlan, g, tile, h, include_halo,
+                         ntx_loc, nty_loc):
+    """Sharded (px, py, ntiles_loc, ...) source tables at one binning."""
+    px, py = plan.pgrid
+    ntl = ntx_loc * nty_loc
+    if g is None:
+        return (jnp.zeros((px, py, ntl, 1, 3), jnp.int32),
+                jnp.full((px, py, ntl, 1), -1, jnp.int32),
+                jnp.zeros((px, py, ntl, 1), jnp.float32))
+    tab = src_mod.tile_source_tables(g, plan.grid_shape, tile, h,
+                                     include_halo=include_halo)
+    return (_shard_table(tab.coords, px, py, ntx_loc, nty_loc),
+            _shard_table(tab.sid, px, py, ntx_loc, nty_loc),
+            _shard_table(tab.scale, px, py, ntx_loc, nty_loc))
+
+
+def _inner_receiver_tables(plan: DistTBPlan, receivers, tile, h,
+                           ntx_loc, nty_loc):
+    """(global rtab | None, sharded coords, sharded weights)."""
+    px, py = plan.pgrid
+    ntl = ntx_loc * nty_loc
+    if receivers is None:
+        return (None,
+                jnp.zeros((px, py, ntl, 1, 3), jnp.int32),
+                jnp.zeros((px, py, ntl, 1), jnp.float32))
+    rtab = src_mod.tile_receiver_tables(receivers, plan.grid_shape, tile, h)
+    return (rtab,
+            _shard_table(rtab.coords, px, py, ntx_loc, nty_loc),
+            _shard_table(rtab.weight, px, py, ntx_loc, nty_loc))
 
 
 # ---------------------------------------------------------------------------
@@ -245,41 +477,59 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
                  g: Optional[src_mod.GriddedSources],
                  receivers: Optional[src_mod.GriddedReceivers],
                  params: Dict[str, jnp.ndarray], interpret: bool):
-    """Build the shard_map'd tile function + its sharded tables and padded
-    params for one time-tile depth (main T or the nt % T remainder).
+    """Build the shard_map'd tile function, its sharded tables / padded
+    params, and the receiver-partial combiner for one time-tile depth
+    (main T or the nt % T remainder).
 
     The host-built tables depend only on geometry (g's affected points,
-    block, halo) — never on `params` — so this whole setup traces cleanly
-    under jit; the param-dependent injection scale is gathered in-graph by
-    the tile function (table `scale` column = 1/0 validity mask)."""
+    block, inner tile, halo) — never on `params` — so this whole setup
+    traces cleanly under jit; the param-dependent injection scale is
+    gathered in-graph by the tile function (table `scale` column = 1/0
+    validity mask).
+
+    Returns (run_tile, combine) with
+      run_tile(state, src_win, scale_vec) -> (new state, partials pytree)
+      combine(partials) -> (T_depth, nrec, rec_channels) per-step samples.
+    """
     physics = plan.physics
     ns = len(physics.state_fields)
     npar = len(physics.param_fields)
     px, py = plan.pgrid
     bx, by = plan.block
-    h = T_depth * plan.r_step
+    r = plan.r_step
+    h = T_depth * r
+    itx, ity = plan.inner_tile
+    ntx_loc, nty_loc = bx // itx, by // ity
+    overlap = plan.overlap
+    T_rest = T_depth - 1 if overlap else T_depth  # steps the inner exec runs
+    h_in = T_rest * r
+    depths = plan.field_depths(T_depth)
+    nrec = receivers.num if receivers is not None else 0
+    nchan = physics.rec_channels
     spec3 = P(plan.ax_x, plan.ax_y, None)
 
     # --- host-side owner-sharded source/receiver tables ---------------------
-    if g is not None:
-        tab = src_mod.tile_source_tables(
-            g, plan.grid_shape, (bx, by), h, include_halo=T_depth > 1)
-        s_coords = tab.coords.reshape(px, py, -1, 3)
-        s_sid = tab.sid.reshape(px, py, -1)
-        s_mask = tab.scale.reshape(px, py, -1)   # 1 valid / 0 padding
-    else:
-        s_coords = jnp.zeros((px, py, 1, 3), jnp.int32)
-        s_sid = jnp.full((px, py, 1), -1, jnp.int32)
-        s_mask = jnp.zeros((px, py, 1), jnp.float32)
-    if receivers is not None:
-        rtab = src_mod.tile_receiver_tables(receivers, plan.grid_shape,
-                                            (bx, by), h)
-        r_coords = rtab.coords.reshape(px, py, -1, 3)
-        r_w = rtab.weight.reshape(px, py, -1)
-    else:
-        rtab = None
-        r_coords = jnp.zeros((px, py, 1, 3), jnp.int32)
-        r_w = jnp.zeros((px, py, 1), jnp.float32)
+    extra, extra_specs = [], []
+    rtab_in = rtab_o = None
+    if T_rest > 0:
+        in_sc, in_sid, in_smask = _inner_source_tables(
+            plan, g, (itx, ity), h_in, T_rest > 1, ntx_loc, nty_loc)
+        rtab_in, in_rc, in_rw = _inner_receiver_tables(
+            plan, receivers, (itx, ity), h_in, ntx_loc, nty_loc)
+        extra += [in_sc, in_sid, in_smask, in_rc, in_rw]
+        extra_specs += [P(plan.ax_x, plan.ax_y, *(None,) * (a.ndim - 2))
+                        for a in extra[-5:]]
+    if overlap:
+        # shard-level tables for the split first step (window = the whole
+        # exchanged block, one "tile" per shard)
+        o_sc, o_sid, o_smask = _inner_source_tables(
+            plan, g, (bx, by), h, T_depth > 1, 1, 1)
+        rtab_o, o_rc, o_rw = _inner_receiver_tables(
+            plan, receivers, (bx, by), h, 1, 1)
+        o_tabs = [a[:, :, 0] for a in (o_sc, o_sid, o_smask, o_rc, o_rw)]
+        extra += o_tabs
+        extra_specs += [P(plan.ax_x, plan.ax_y, *(None,) * (a.ndim - 2))
+                        for a in o_tabs]
 
     # --- time-invariant param halos (exchanged once per depth) --------------
     fills = dict(physics.param_fills)
@@ -301,18 +551,25 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
     prepped = prepare(*[params[f] for f in physics.param_fields])
     param_pads, dom_pad = prepped[:npar], prepped[npar]
 
-    # --- one outer-trapezoid tile: exchange + T local steps -----------------
+    # --- one outer-trapezoid tile: deep exchange + T local steps ------------
     sspec = _StepSpec(float(plan.dt), tuple(float(s) for s in plan.spacing),
                       plan.order)
     in_specs = ((spec3,) * ns + (spec3,) * npar + (spec3,)
-                + (P(plan.ax_x, plan.ax_y, None, None),
-                   P(plan.ax_x, plan.ax_y, None),
-                   P(plan.ax_x, plan.ax_y, None))
-                + (P(plan.ax_x, plan.ax_y, None, None),
-                   P(plan.ax_x, plan.ax_y, None))
-                + (P(None, None), P(None)))
-    out_specs = ((spec3,) * ns
-                 + (P(plan.ax_x, plan.ax_y, None, None, None),))
+                + tuple(extra_specs) + (P(None, None), P(None)))
+    out_specs = (spec3,) * ns
+    if overlap:
+        out_specs += (P(plan.ax_x, plan.ax_y, None, None, None),)
+    if T_rest > 0:
+        out_specs += (P(plan.ax_x, plan.ax_y, None, None, None, None, None),)
+
+    def _gather_vals(win, sid, smask, scale_vec, dtype):
+        """(T, npts) decomposed wavelets -> per-tile (tiles..., T, cap)
+        injection values, scale gathered in-graph."""
+        safe = jnp.maximum(sid, 0)
+        sv = win[:, safe] * (scale_vec[safe] * smask)[None]
+        ndim = sv.ndim  # (T, *tiles, cap)
+        return jnp.transpose(sv, tuple(range(1, ndim - 1)) + (0, ndim - 1)
+                             ).astype(dtype)
 
     # check_rep=False: the replication checker has no rule for pallas_call
     # (the inner="pallas" path); every output is explicitly sharded anyway.
@@ -322,32 +579,68 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
         sblocks = args[:ns]
         ppads = args[ns:ns + npar]
         dom = args[ns + npar]
-        sc, sid, smask, rc, rw, src_win, scale_vec = args[ns + npar + 1:]
-        sc, sid, smask = sc[0, 0], sid[0, 0], smask[0, 0]
-        rc, rw = rc[0, 0], rw[0, 0]
-        # ONE deep exchange per depth-T tile (the whole point)
-        spads = tuple(halo_exchange_2d(b, h, plan.ax_x, plan.ax_y)
-                      for b in sblocks)
-        # per-shard injection values: gather the replicated decomposed
-        # wavelets at this shard's affected points, with the (possibly
-        # traced) param-dependent scale gathered in-graph
-        safe = jnp.maximum(sid, 0)
-        sv = (src_win[:, safe]
-              * (scale_vec[safe] * smask)[None, :]).astype(spads[0].dtype)
-        if plan.inner == "pallas":
-            new, parts = _pallas_shard_tile(plan, T_depth, h, spads, ppads,
-                                            dom, sc, sv, rc, rw, interpret)
+        rest = list(args[ns + npar + 1:])
+        if T_rest > 0:
+            isc, isid, ismask, irc, irw = [a[0, 0] for a in rest[:5]]
+            rest = rest[5:]
+        if overlap:
+            osc, osid, osmask, orc, orw = [a[0, 0] for a in rest[:5]]
+            rest = rest[5:]
+        src_win, scale_vec = rest
+        dtype = sblocks[0].dtype
+        # ONE deep exchange per depth-T tile (the whole point), per-field
+        # depths zero-padded to the uniform window
+        spads = tuple(exchange_to_depth(b, d, h, plan.ax_x, plan.ax_y)
+                      for b, d in zip(sblocks, depths))
+        outs = []
+        if overlap:
+            sv0 = (src_win[0][jnp.maximum(osid, 0)]
+                   * (scale_vec[jnp.maximum(osid, 0)] * osmask)).astype(dtype)
+            state1, rec1 = _split_first_step(
+                plan, sspec, h, sblocks, spads, ppads, dom, osc, sv0,
+                orc, orw)
+            if T_rest > 0:
+                crop = (slice(r, -r), slice(r, -r))
+                new, parts = _run_inner(
+                    plan, T_rest, h_in,
+                    tuple(a[crop] for a in state1),
+                    tuple(p[crop] for p in ppads), dom[crop],
+                    isc, _gather_vals(src_win[1:], isid, ismask, scale_vec,
+                                      dtype),
+                    irc, irw, interpret)
+                outs = [*new, rec1[None, None], parts[None, None]]
+            else:  # T_depth == 1: the split step IS the tile
+                new = tuple(a[r:-r, r:-r] for a in state1)
+                outs = [*new, rec1[None, None]]
         else:
-            new, parts = _jnp_shard_tile(physics, sspec, T_depth, h, spads,
-                                         ppads, dom, sc, sv, rc, rw)
-        return (*new, parts[None, None])
+            sv = _gather_vals(src_win, isid, ismask, scale_vec, dtype)
+            new, parts = _run_inner(plan, T_depth, h, spads, ppads, dom,
+                                    isc, sv, irc, irw, interpret)
+            outs = [*new, parts[None, None]]
+        return tuple(outs)
 
     def run_tile(state, src_win, scale_vec):
-        outs = tile(*state, *param_pads, dom_pad, s_coords, s_sid, s_mask,
-                    r_coords, r_w, src_win, scale_vec)
-        return tuple(outs[:ns]), outs[ns]
+        outs = tile(*state, *param_pads, dom_pad, *extra, src_win, scale_vec)
+        return tuple(outs[:ns]), tuple(outs[ns:])
 
-    return run_tile, rtab
+    def combine(partials):
+        """Shard partials -> (T_depth, nrec, nchan) per-step samples."""
+        if receivers is None:
+            dtype = jnp.float32
+            return jnp.zeros((T_depth, 0, nchan), dtype)
+        recs = []
+        idx = 0
+        if overlap:
+            recs.append(ops_mod.combine_rec_partials(partials[idx], rtab_o,
+                                                     nrec))
+            idx += 1
+        if T_rest > 0:
+            gparts = _global_partials(partials[idx], px, py, ntx_loc,
+                                      nty_loc)
+            recs.append(ops_mod.combine_rec_partials(gparts, rtab_in, nrec))
+        return recs[0] if len(recs) == 1 else jnp.concatenate(recs, axis=0)
+
+    return run_tile, combine
 
 
 def sharded_tb_propagate(plan: DistTBPlan, nt: int,
@@ -364,6 +657,9 @@ def sharded_tb_propagate(plan: DistTBPlan, nt: int,
     handles layout via the shard_map specs).  `nt` need not divide by
     `plan.T`; the remainder runs as a shallower tile with its own
     (smaller) exchange depth, mirroring `kernels/ops._tb_propagate`.
+    The schedule — inner spatial tiling, per-field exchange depths,
+    overlapped exchange — comes from the plan and never changes results,
+    only data movement (tested across all combinations).
 
     Returns (final state tuple, rec (nt, nrec, rec_channels) | None) with
     per-step receiver samples at any T (each shard records masked partials,
@@ -381,7 +677,6 @@ def sharded_tb_propagate(plan: DistTBPlan, nt: int,
         raise ValueError(f"{physics.name} carries "
                          f"{len(physics.state_fields)} state fields, "
                          f"got {len(state)}")
-    nrec = receivers.num if receivers is not None else 0
     nchan = physics.rec_channels
     dtype = state[0].dtype
 
@@ -405,29 +700,26 @@ def sharded_tb_propagate(plan: DistTBPlan, nt: int,
 
     recs_main = None
     if n_main > 0:
-        run_tile, rtab = _depth_setup(plan, plan.T, g, receivers, params,
-                                      interpret)
+        run_tile, combine = _depth_setup(plan, plan.T, g, receivers, params,
+                                         interpret)
 
         def body(carry, tile_idx):
             new, parts = run_tile(carry, src_window(tile_idx * plan.T,
                                                     plan.T), scale_vec)
-            rec = (ops_mod.combine_rec_partials(parts, rtab, nrec)
-                   if receivers is not None
-                   else jnp.zeros((plan.T, 0, nchan), dtype))
-            return new, rec
+            return new, combine(parts)
 
         state, recs_main = jax.lax.scan(body, state, jnp.arange(n_main))
         recs_main = recs_main.reshape(n_main * plan.T, -1, nchan)
 
     if rem > 0:
-        rplan = plan._replace(T=rem)
-        run_rem, rrtab = _depth_setup(rplan, rem, g, receivers, params,
-                                      interpret)
+        rplan = plan._replace(
+            T=rem, inner_plan=(dataclasses.replace(plan.inner_plan, T=rem)
+                               if plan.inner_plan is not None else None))
+        run_rem, combine_rem = _depth_setup(rplan, rem, g, receivers,
+                                            params, interpret)
         state, parts = run_rem(state, src_window(n_main * plan.T, rem),
                                scale_vec)
-        rec_rem = (ops_mod.combine_rec_partials(parts, rrtab, nrec)
-                   if receivers is not None
-                   else jnp.zeros((rem, 0, nchan), dtype))
+        rec_rem = combine_rem(parts)
         recs = (jnp.concatenate([recs_main, rec_rem], axis=0)
                 if recs_main is not None else rec_rem)
     else:

@@ -130,6 +130,33 @@ def make_spec(shape: Tuple[int, int, int], plan: TBPlan, order: int,
         rec_channels=physics.rec_channels)
 
 
+def make_inner_spec(block: Tuple[int, int], nz: int,
+                    inner_tile: Tuple[int, int], T: int, order: int,
+                    dt: float, spacing: Tuple[float, float, float],
+                    src_cap: int, rec_cap: int, dtype,
+                    physics: phys.TBPhysics) -> ker.TBKernelSpec:
+    """Kernel spec for the INNER trapezoid of one shard (DESIGN.md §4).
+
+    The shard's (bx, by) block plays the role of the kernel's grid and the
+    shard's exchanged deep halo plays the role of its zero padding; the
+    kernel's own spatial grid is `block / inner_tile` tiles, each DMA'ing
+    an `inner_tile + 2*T*r_step` window out of the exchanged block —
+    `tb_time_tile`'s per-tile window slice composes the shard's `dom_pad`
+    with the inner tile offsets automatically (every HBM operand,
+    including the external domain mask, is sliced at the same
+    `(ti*tx, tj*ty)` window origin)."""
+    bx, by = block
+    tx, ty = inner_tile
+    if bx % tx or by % ty:
+        raise ValueError(f"inner tile {inner_tile} must divide the shard "
+                         f"block {block}")
+    return ker.TBKernelSpec(
+        nx=bx, ny=by, nz=nz, tile=(tx, ty), T=T, order=order, dt=float(dt),
+        spacing=tuple(float(s) for s in spacing), src_cap=src_cap,
+        rec_cap=rec_cap, dtype=dtype, step_radius=physics.step_radius(order),
+        rec_channels=physics.rec_channels)
+
+
 def _tb_propagate(physics: phys.TBPhysics, nt: int,
                   state: Tuple[jnp.ndarray, ...],
                   params: Dict[str, jnp.ndarray],

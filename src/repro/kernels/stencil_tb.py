@@ -233,6 +233,12 @@ def tb_time_tile(spec: TBKernelSpec, physics: phys.TBPhysics,
                   the spec-derived one — used when this kernel runs on one
                   shard of a decomposed grid (distributed/halo.py), where
                   "inside the physical domain" depends on the shard offset.
+                  It is DMA'd per tile through the same `(ti*tx, tj*ty)`
+                  window slice as the field operands, so it composes with
+                  a multi-tile inner grid (spec.tile < (nx, ny)) exactly
+                  like the state windows: the sharded layer's inner
+                  `TBPlan` spatially tiles the exchanged shard block in
+                  one `pallas_call` (DESIGN.md §4).
     Returns (new_states tuple, rec_partials) with fields (nx, ny, nz) and
     rec_partials (ntx, nty, T, capr, rec_channels).
     """

@@ -74,6 +74,16 @@ class TBPhysics:
     # (field, value) pairs: what out-of-domain param cells must hold so the
     # update stays finite there (everything it computes is re-masked anyway)
     param_fills: Tuple[Tuple[str, float], ...] = ()
+    # per-state-field exchange-depth reduction in units of order//2 for the
+    # sharded deep-halo exchange (DESIGN.md §4): a field the update only
+    # reads pointwise at the rim — previous-time-level copies; the elastic
+    # velocities, which feed the stress derivative one pass *after* the
+    # stresses feed theirs — provably needs a shallower exchanged strip.
+    # Depth per field is max(T*step_radius - lag*(order//2), 0); () means
+    # every field ships the full uniform depth.  Numeric mirror:
+    # core.temporal_blocking.PHYSICS_COSTS[...].halo_lag_units (drift is
+    # guarded by tests/test_tb_cost_model.py).
+    halo_lags: Tuple[int, ...] = ()
 
     @property
     def num_windows(self) -> int:
@@ -82,6 +92,13 @@ class TBPhysics:
     def step_radius(self, order: int) -> int:
         """Per-in-VMEM-step halo consumption (grid points per side)."""
         return self.radius_mult * (order // 2)
+
+    def field_halo_depths(self, T: int, order: int) -> Tuple[int, ...]:
+        """Per-state-field exchange depth for a depth-T outer tile."""
+        h = T * self.step_radius(order)
+        r0 = order // 2
+        lags = self.halo_lags or (0,) * len(self.state_fields)
+        return tuple(max(h - lag * r0, 0) for lag in lags)
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +134,7 @@ ACOUSTIC = TBPhysics(
     record=lambda s: (s["u"],),
     inject_scale=_acoustic_scale,
     param_fills=(("m", 1.0),),   # update divides by m + damp*dt
+    halo_lags=(1, 0),            # u_prev is only read pointwise
 )
 
 
@@ -149,6 +167,7 @@ TTI = TBPhysics(
     record=lambda s: (s["p"],),
     inject_scale=_acoustic_scale,   # same dt^2/m factor as acoustic
     param_fills=(("m", 1.0),),   # update divides by m + damp*dt
+    halo_lags=(0, 2, 0, 2),      # p_prev / r_prev only read pointwise
 )
 
 
@@ -185,6 +204,10 @@ ELASTIC = TBPhysics(
     record=lambda s: (s["vz"], -(s["txx"] + s["tyy"] + s["tzz"]) / 3.0),
     inject_scale=_elastic_scale,
     premasked_fields=("vx", "vy", "vz"),  # stencil_update masks mid-step
+    # v-first update order: initial stresses feed the step-1 velocity
+    # derivatives (full depth), initial velocities are read pointwise and
+    # first differentiated one half-step later — one r0 shallower.
+    halo_lags=(1, 1, 1, 0, 0, 0, 0, 0, 0),
 )
 
 

@@ -64,6 +64,41 @@ def _shape_bytes(text: str) -> int:
     return total
 
 
+def stencil_plan_report(physics: str, nz: int, order: int,
+                        block, **plan_kwargs) -> dict:
+    """Joint two-level TB plan selection for one per-device stencil block
+    (DESIGN.md §4) — the stencil analogue of an LM dry-run cell.
+
+    Runs `core.temporal_blocking.plan_hierarchy` (outer exchange depth x
+    inner Pallas tile x overlapped-vs-serialized exchange, under the
+    mesh-aware cost model) and records what the executor will do plus the
+    per-field exchange-byte saving against the uniform-depth baseline.
+    Consumed by `launch/stencil_dist.py --dryrun` and
+    `benchmarks/fig12_scaling.py --dryrun`.
+    """
+    from repro.core.temporal_blocking import plan_hierarchy
+
+    hier, log = plan_hierarchy(physics, nz, order, block, **plan_kwargs)
+    entry = log[(hier.inner.tile[0], hier.inner.tile[1], hier.T)]
+    uni = hier.exchange_bytes_uniform(nz)
+    pf = hier.exchange_bytes(nz)
+    return {
+        "physics": physics, "order": order, "block": list(block), "nz": nz,
+        "outer": {"T": hier.T, "halo": hier.halo,
+                  "overlap": hier.overlap,
+                  "field_depths": list(hier.field_depths)},
+        "inner": {"tile": list(hier.inner.tile),
+                  "grid": [block[0] // hier.inner.tile[0],
+                           block[1] // hier.inner.tile[1]]},
+        "exchange_bytes": int(pf),
+        "exchange_bytes_uniform": int(uni),
+        "exchange_saving": round(1.0 - pf / uni, 4) if uni else 0.0,
+        "model": {k: entry[k] for k in
+                  ("compute_s", "memory_s", "comm_s", "split_s", "cost_s")
+                  if k in entry},
+    }
+
+
 def collective_bytes(hlo_text: str) -> dict:
     """Bytes moved per collective class: sum of result-shape sizes of every
     collective op in the partitioned module (per-device view)."""

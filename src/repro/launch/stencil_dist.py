@@ -22,11 +22,23 @@ traces — with the single-device Listing-1 reference.
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m repro.launch.stencil_dist --check --inner pallas --n 32
 
-  # production-mesh dry-run (lower+compile only) for the paper's 512^3 case:
+  # two-level plan: inner tile strictly smaller than the shard block,
+  # overlapped (split-first-step) deep exchange:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.stencil_dist --check --inner pallas \
+      --inner-tile 4,8 --overlap --n 32
+
+  # let the joint autotuner pick (T, inner tile, overlap) for the block:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.stencil_dist --check --auto-plan --n 32
+
+  # production-mesh dry-run (lower+compile only) for the paper's 512^3 case,
+  # reporting the joint plan selection alongside the collective schedule:
   python -m repro.launch.stencil_dist --dryrun --multipod
 """
 import argparse
 import functools
+import json
 import os
 import sys
 
@@ -105,8 +117,23 @@ def main():
     ap.add_argument("--physics", default="acoustic",
                     choices=("acoustic", "tti", "elastic"))
     ap.add_argument("--inner", default="jnp", choices=("jnp", "pallas"),
-                    help="per-shard schedule: jnp oracle or the Pallas TB "
+                    help="per-shard executor: jnp oracle or the Pallas TB "
                          "kernel (interpret mode off-TPU)")
+    ap.add_argument("--inner-tile", default=None,
+                    help="tx,ty spatial tile of the inner trapezoid "
+                         "(must divide the shard block); default: one tile "
+                         "covering the block")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped deep exchange: split first step into "
+                         "interior (runs under the ppermute) + rim strips")
+    ap.add_argument("--uniform-halo", action="store_true",
+                    help="disable per-field exchange depths (ship every "
+                         "state field at the full T*r_step)")
+    ap.add_argument("--auto-plan", action="store_true",
+                    help="joint two-level autotune: pick T, inner tile and "
+                         "overlap for this block via plan_hierarchy "
+                         "(overrides --T; mutually exclusive with "
+                         "--inner-tile/--overlap/--sweep-T)")
     ap.add_argument("--check", action="store_true")
     ap.add_argument("--sweep-T", default=None,
                     help="comma list of T depths; checks per-step receiver "
@@ -118,6 +145,9 @@ def main():
     ap.add_argument("--T", type=int, default=2)
     ap.add_argument("--order", type=int, default=4)
     args = ap.parse_args()
+    if args.auto_plan and (args.inner_tile or args.overlap or args.sweep_T):
+        ap.error("--auto-plan picks T/inner tile/overlap itself; it cannot "
+                 "be combined with --inner-tile, --overlap or --sweep-T")
 
     if args.dryrun and "--xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -129,19 +159,59 @@ def main():
 
     from repro.core import sources as S
     from repro.core.grid import Grid
-    from repro.distributed.halo import DistTBPlan, sharded_tb_propagate
+    from repro.core.temporal_blocking import TBPlan, plan_hierarchy
+    from repro.distributed.halo import (DistTBPlan, dist_plan_from_hier,
+                                        sharded_tb_propagate)
     from repro.kernels import tb_physics as phys
     from repro.launch import mesh as mesh_lib
+
+    # one candidate space for BOTH the --auto-plan build and the --dryrun
+    # report, so the plan printed is the plan compiled
+    AUTO_TILES = (4, 8, 16, 32, 64, 128)
+    AUTO_DEPTHS = (1, 2, 4, 8)
+
+    def build_plan(mesh, shape, grid, physics, order, dt, T):
+        """DistTBPlan from the CLI's two-level flags (or the joint
+        autotuner with --auto-plan)."""
+        px, py = mesh.shape["data"], mesh.shape["model"]
+        block = (shape[0] // px, shape[1] // py)
+        common = dict(inner=args.inner,
+                      per_field_halo=not args.uniform_halo)
+        if args.auto_plan:
+            hier, _ = plan_hierarchy(args.physics, shape[2], order, block,
+                                     tiles=AUTO_TILES, depths=AUTO_DEPTHS)
+            print(f"auto-plan: T={hier.T} inner tile={hier.inner.tile} "
+                  f"overlap={hier.overlap} "
+                  f"field depths={hier.field_depths}")
+            return dist_plan_from_hier(mesh, shape, physics, order, hier,
+                                       dt, grid.spacing, **common)
+        inner_plan = None
+        if args.inner_tile:
+            tx, ty = (int(v) for v in args.inner_tile.split(","))
+            inner_plan = TBPlan((tx, ty), T, physics.step_radius(order))
+        return DistTBPlan(mesh=mesh, grid_shape=shape, physics=physics,
+                          order=order, T=T, dt=dt, spacing=grid.spacing,
+                          inner_plan=inner_plan, overlap=args.overlap,
+                          **common)
 
     if args.dryrun:
         mesh = mesh_lib.make_production_mesh(multi_pod=args.multipod)
         n = 512
         shape = (n, n, n)
         grid = Grid(shape=shape, spacing=(10.0,) * 3)
-        plan = DistTBPlan(mesh=mesh, grid_shape=shape,
-                          physics=phys.PHYSICS[args.physics],
-                          order=args.order, T=args.T, dt=1e-3,
-                          spacing=grid.spacing)
+        px, py = mesh.shape["data"], mesh.shape["model"]
+        from repro.launch.dryrun import stencil_plan_report
+        # same candidate space as build_plan's --auto-plan branch, so with
+        # --auto-plan the recommendation below IS the compiled plan
+        report = stencil_plan_report(args.physics, shape[2], args.order,
+                                     (shape[0] // px, shape[1] // py),
+                                     tiles=AUTO_TILES, depths=AUTO_DEPTHS)
+        print("autotuner recommendation:", json.dumps(report))
+        plan = build_plan(mesh, shape, grid, phys.PHYSICS[args.physics],
+                          args.order, 1e-3, args.T)
+        print(f"compiled plan: T={plan.T} inner_tile={plan.inner_tile} "
+              f"overlap={plan.overlap} "
+              f"field_depths={plan.field_depths(plan.T)}")
         ns = len(plan.physics.state_fields)
         npar = len(plan.physics.param_fields)
         u = jax.ShapeDtypeStruct(shape, jnp.float32)
@@ -184,9 +254,7 @@ def main():
     gr = S.precompute_receivers(rec, grid)
 
     def run(T):
-        plan = DistTBPlan(mesh=mesh, grid_shape=shape, physics=physics,
-                          order=order, T=T, dt=dt, spacing=grid.spacing,
-                          inner=args.inner)
+        plan = build_plan(mesh, shape, grid, physics, order, dt, T)
         # jit on purpose: the parity checks double as a regression test of
         # the driver's jit-compatibility contract (state/params traced)
         fn = jax.jit(functools.partial(sharded_tb_propagate, plan, nt,
@@ -213,7 +281,10 @@ def main():
 
     dstate, drec = run(args.T)
     print(f"sharded {args.physics} propagate done on mesh "
-          f"{dict(mesh.shape)} (inner={args.inner}, nt={nt}, T={args.T})")
+          f"{dict(mesh.shape)} (inner={args.inner}, "
+          f"inner_tile={args.inner_tile or 'block'}, "
+          f"overlap={args.overlap}, "
+          f"per_field_halo={not args.uniform_halo}, nt={nt}, T={args.T})")
 
     if args.check:
         rstate, rrec = ref_fn(nt, g, gr)

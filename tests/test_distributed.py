@@ -55,6 +55,76 @@ def test_distributed_pallas_inner_equals_reference():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("physics,inner", [
+    ("acoustic", "jnp"), ("acoustic", "pallas"),
+    ("tti", "jnp"), ("tti", "pallas"),
+    ("elastic", "jnp"), ("elastic", "pallas"),
+])
+def test_two_level_inner_tile_equals_reference(physics, inner):
+    """Hierarchical plan: inner tile (4, 8) STRICTLY smaller than the
+    (8, 16) shard block, spatially tiling the exchanged block inside the
+    per-shard schedule — both executors, every physics, remainder tile
+    included (nt=5, T=2)."""
+    r = _run(["-m", "repro.launch.stencil_dist", "--check", "--physics",
+              physics, "--inner", inner, "--inner-tile", "4,8",
+              "--n", "32", "--nt", "5", "--T", "2"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "CHECK PASS" in r.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("physics,inner", [
+    ("acoustic", "pallas"), ("elastic", "jnp"), ("tti", "jnp"),
+])
+def test_overlapped_exchange_equals_reference(physics, inner):
+    """The overlapped deep exchange (split interior/rim first step, then
+    the inner executor at depth H - r_step) is bit-compatible with the
+    serialized schedule — combined with an inner tile below the block."""
+    r = _run(["-m", "repro.launch.stencil_dist", "--check", "--physics",
+              physics, "--inner", inner, "--inner-tile", "4,8",
+              "--overlap", "--n", "32", "--nt", "5", "--T", "2"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "CHECK PASS" in r.stdout
+
+
+@pytest.mark.slow
+def test_uniform_halo_matches_per_field():
+    """--uniform-halo (full-depth exchange for every field) and the
+    default per-field depths agree with the reference — the depth
+    reduction never changes valid centres, only exchange bytes."""
+    r = _run(["-m", "repro.launch.stencil_dist", "--check", "--physics",
+              "elastic", "--uniform-halo", "--n", "32", "--nt", "4",
+              "--T", "2"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "CHECK PASS" in r.stdout
+
+
+@pytest.mark.slow
+def test_auto_plan_self_check():
+    """--auto-plan runs the joint (T, inner tile, overlap) autotuner for
+    the shard block and the chosen hierarchical plan passes parity."""
+    r = _run(["-m", "repro.launch.stencil_dist", "--check", "--auto-plan",
+              "--n", "32", "--nt", "8"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "auto-plan:" in r.stdout
+    assert "CHECK PASS" in r.stdout
+
+
+@pytest.mark.slow
+def test_fig12_dryrun_reports_joint_plans():
+    """The scaling benchmark's cost-model sweep reports joint (outer,
+    inner, overlap) selections with elastic exchange bytes reduced vs the
+    uniform-depth baseline (acceptance criterion)."""
+    r = _run(["-m", "benchmarks.fig12_scaling", "--dryrun"],
+             env={**os.environ,
+                  "PYTHONPATH": os.pathsep.join(
+                      (os.path.join(REPO, "src"), REPO))})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "# plan elastic" in r.stdout
+    assert "T=" in r.stdout and "overlap=" in r.stdout
+
+
+@pytest.mark.slow
 def test_receiver_traces_invariant_across_T():
     """Per-step receiver traces are a schedule invariant: T in {1, 2, 4}
     must produce the same (nt, nrec) trace (regression for the old

@@ -224,5 +224,6 @@ class TestTBPlanModel:
     def test_autotune_respects_vmem(self):
         plan, log = tb.autotune_plan(nz=64, radius=2,
                                      vmem_budget=8 * 2 ** 20)
-        assert plan.vmem_bytes(64) <= 8 * 2 ** 20
+        assert plan.vmem_bytes(
+            64, tb.PHYSICS_COSTS["acoustic"].fields) <= 8 * 2 ** 20
         assert len(log) > 0

@@ -13,7 +13,8 @@ import math
 import pytest
 
 from repro.core.temporal_blocking import (PHYSICS_COSTS, TBPlan,
-                                          autotune_plan, plan_for_physics)
+                                          autotune_plan, plan_for_physics,
+                                          plan_hierarchy)
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +166,71 @@ def test_plan_for_physics_mesh_aware():
     assert el_plan.halo <= 16
 
 
+def test_exchange_bytes_per_field_depths():
+    """Per-field depths price each field's strip at its own depth; zero
+    depth drops the field from both the bytes and the latency term."""
+    plan = TBPlan((16, 16), T=2, radius=2)  # halo 4
+    block, nz = (32, 32), 128
+
+    def strip(d):
+        return 2 * d * nz * (32 + 32 + 2 * d) * 4
+
+    got = plan.exchange_bytes_per_tile(block, nz, depths=(4, 2, 0))
+    assert got == strip(4) + strip(2)
+    # uniform call unchanged
+    assert plan.exchange_bytes_per_tile(block, nz, fields=3) == 3 * strip(4)
+    # latency counts only the fields that actually move
+    lat = plan.exchange_seconds_per_point_step(
+        block, nz, 3, link_bw=1e30, link_latency=1.0, depths=(4, 2, 0))
+    lat_all = plan.exchange_seconds_per_point_step(
+        block, nz, 3, link_bw=1e30, link_latency=1.0)
+    assert lat == pytest.approx(lat_all * 2 / 3)
+
+
+def test_elastic_per_field_exchange_reduced():
+    """The acceptance signal: with the physics' halo lags, elastic moves
+    fewer bytes per exchange than the uniform-depth baseline (stresses are
+    first differentiated one half-step after the velocities, TTI/acoustic
+    previous-time levels are pointwise-only)."""
+    for physics in ("acoustic", "tti", "elastic"):
+        hier, _ = plan_hierarchy(physics, nz=128, order=4, block=(32, 32))
+        assert hier.exchange_bytes(128) < hier.exchange_bytes_uniform(128)
+
+
+def test_plan_hierarchy_inner_divides_block():
+    block = (48, 48)
+    hier, log = plan_hierarchy("acoustic", nz=128, order=4, block=block,
+                               tiles=(8, 12, 16, 24, 32, 48))
+    assert block[0] % hier.inner.tile[0] == 0
+    assert block[1] % hier.inner.tile[1] == 0
+    assert hier.halo <= min(block)
+    # every feasible sweep entry divides too (the inner kernel grid needs it)
+    assert all(block[0] % t[0] == 0 and block[1] % t[1] == 0 for t in log)
+
+
+def test_plan_hierarchy_overlap_credit():
+    """Overlap is selected when the exchange is worth hiding (comparable
+    to compute) and rejected when the exchange is ~free (the rim-strip
+    recompute would be pure loss)."""
+    kw = dict(nz=128, order=4, block=(32, 32))
+    costly, _ = plan_hierarchy("acoustic", link_bw=1e9, link_latency=1e-5,
+                               **kw)
+    free, _ = plan_hierarchy("acoustic", link_bw=1e30, link_latency=0.0,
+                             **kw)
+    assert costly.overlap
+    assert not free.overlap
+
+
+def test_serialized_exchange_is_additive():
+    """Without overlap the exchange blocks the tile: cost = max(comp, mem)
+    + comm, not max of the three."""
+    _, log = autotune_plan(nz=128, radius=2, mesh_block=(32, 32),
+                           link_bw=1e9, link_latency=1e-6)
+    for e in log.values():
+        assert e["cost_s"] == pytest.approx(
+            max(e["compute_s"], e["memory_s"]) + e["comm_s"])
+
+
 # ---------------------------------------------------------------------------
 # Per-physics pricing
 # ---------------------------------------------------------------------------
@@ -217,8 +283,15 @@ def test_physics_costs_match_kernel_specs():
         assert pc.param_fields == len(tp.param_fields)
         assert pc.evolved_fields == len(tp.evolved_fields)
         assert pc.radius_mult == tp.radius_mult
+        assert pc.halo_lag_units == tp.halo_lags
         for order in (2, 4, 8, 12):
             assert pc.step_radius(order) == tp.step_radius(order)
+            for T in (1, 2, 4):
+                h = T * tp.step_radius(order)
+                depths = tp.field_halo_depths(T, order)
+                assert depths == tuple(
+                    max(h - lag, 0) for lag in pc.exchange_lags(order))
+                assert max(depths) == h  # some field always ships full
     assert set(PHYSICS_COSTS) == set(phys.PHYSICS)
 
 
