@@ -34,7 +34,7 @@ import json
 import sys
 
 KEY = ("mode", "ndev", "physics", "grid", "nt", "T", "order",
-       "inner_tile", "overlap")
+       "inner_tile", "inner_T", "overlap")
 
 
 def cell_key(rec: dict):

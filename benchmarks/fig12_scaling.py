@@ -34,7 +34,7 @@ REPO = os.path.dirname(HERE)
 
 
 def _child(ndev: int, mode: str, physics: str, n_base: int, nt: int, T: int,
-           order: int, overlap: bool = False):
+           order: int, overlap: bool = False, inner_T: int = None):
     """Measure one (ndev, mode) cell; prints a single JSON line."""
     import numpy as np
     import jax.numpy as jnp
@@ -72,12 +72,17 @@ def _child(ndev: int, mode: str, physics: str, n_base: int, nt: int, T: int,
     from repro.core.temporal_blocking import TBPlan
 
     # inner tile = half the block where that divides evenly — the measured
-    # cells exercise the same two-level schedule the planner selects
+    # cells exercise the same two-level schedule the planner selects; an
+    # inner_T below T additionally exercises the time-nested passes
+    inner_T = T if inner_T is None else inner_T
     bx, by = shape[0] // px, shape[1] // py
     itile = (max(bx // 2, 1), max(by // 2, 1))
-    inner_plan = (TBPlan(itile, T, phys.PHYSICS[physics].step_radius(order))
-                  if bx % itile[0] == 0 and by % itile[1] == 0
-                  and itile != (bx, by) else None)
+    divides = bx % itile[0] == 0 and by % itile[1] == 0
+    if not divides:
+        itile = (bx, by)
+    inner_plan = (TBPlan(itile, inner_T,
+                         phys.PHYSICS[physics].step_radius(order))
+                  if itile != (bx, by) or inner_T != T else None)
     plan = DistTBPlan(mesh=mesh, grid_shape=shape,
                       physics=phys.PHYSICS[physics], order=order, T=T,
                       dt=dt, spacing=grid.spacing, inner_plan=inner_plan,
@@ -102,6 +107,7 @@ def _child(ndev: int, mode: str, physics: str, n_base: int, nt: int, T: int,
         "seconds": sec, "mpoints_per_s": pts / sec / 1e6,
         "halo": plan.halo, "block": list(plan.block),
         "inner_tile": list(plan.inner_tile), "overlap": plan.overlap,
+        "inner_T": plan.inner_T, "outer_T": plan.T,
         "field_depths": list(plan.field_depths(T))}))
 
 
@@ -121,7 +127,7 @@ def dryrun(blocks=((32, 32), (64, 64)), nz: int = 512, order: int = 4,
             rep = stencil_plan_report(physics, nz, order, block)
             rows.append(rep)
             print(f"# plan {physics} block={block[0]}x{block[1]}: "
-                  f"T={rep['outer']['T']} "
+                  f"T={rep['outer']['T']} inner_T={rep['inner']['T']} "
                   f"inner={rep['inner']['tile'][0]}x{rep['inner']['tile'][1]} "
                   f"overlap={rep['outer']['overlap']} "
                   f"exchange {rep['exchange_bytes']/2**20:.2f} MiB "
@@ -130,6 +136,26 @@ def dryrun(blocks=((32, 32), (64, 64)), nz: int = 512, order: int = 4,
     el = [r for r in rows if r["physics"] == "elastic"]
     assert all(r["exchange_bytes"] < r["exchange_bytes_uniform"]
                for r in el), "per-field depths must cut elastic bytes"
+    # the time-nesting acceptance point: under a tight VMEM budget and a
+    # latency-dominated link the planner keeps the deep exchange (equal
+    # exchange bytes per point-step — the bytes depend only on the outer
+    # depth) but consumes it in shallow inner passes, so the VMEM window
+    # is strictly smaller than the flat plan's at the same outer T
+    nest = stencil_plan_report("acoustic", nz, order, (64, 64),
+                               vmem_budget=4 * 2 ** 20,
+                               link_bw=45e9, link_latency=2e-5,
+                               tiles=(8, 16, 32, 64), depths=(1, 2, 4, 8))
+    rows.append(nest)
+    print(f"# nested acoustic block=64x64 (4 MiB VMEM, 20us link): "
+          f"outer_T={nest['outer']['T']} inner_T={nest['inner']['T']} "
+          f"({nest['inner']['passes']} passes) "
+          f"vmem {nest['vmem_bytes']/2**20:.2f} MiB vs flat "
+          f"{nest['vmem_bytes_flat']/2**20:.2f} MiB at equal exchange "
+          f"{nest['exchange_bytes']/2**20:.2f} MiB")
+    assert nest["inner"]["T"] < nest["outer"]["T"], \
+        "latency-dominated + VMEM-capped point must select a nested plan"
+    assert nest["vmem_bytes"] < nest["vmem_bytes_flat"], \
+        "nesting must shrink the VMEM window at fixed exchange depth"
     if out:
         outdir = os.path.dirname(out)
         if outdir:
@@ -152,29 +178,36 @@ def run(ndevs=(1, 2, 4, 8), out: str = None, fast: bool = False,
     records = []
     for mode in ("weak", "strong"):
         for ndev in ndevs:
-            env = {**os.environ,
-                   "XLA_FLAGS": f"--xla_force_host_platform_device_count"
-                                f"={ndev}"}
-            env["PYTHONPATH"] = os.pathsep.join(
-                p for p in (os.path.join(REPO, "src"), REPO,
-                            env.get("PYTHONPATH")) if p)
-            r = subprocess.run(
-                [sys.executable, "-m", "benchmarks.fig12_scaling",
-                 "--child", "--ndev", str(ndev), "--mode", mode,
-                 "--physics", physics, "--n", str(n_base), "--nt", str(nt),
-                 "--T", str(T), "--order", str(order)]
-                + (["--overlap"] if overlap else []),
-                cwd=REPO, env=env, capture_output=True, text=True,
-                timeout=1800)
-            if r.returncode != 0:
-                print(f"# fig12 {mode} ndev={ndev} FAILED:\n"
-                      + r.stderr[-1500:], file=sys.stderr)
-                raise RuntimeError(f"fig12 child failed ({mode}, {ndev})")
-            rec = json.loads(r.stdout.strip().splitlines()[-1])
-            records.append(rec)
-            emit(f"fig12_{mode}_ndev{ndev}", rec["seconds"] * 1e6,
-                 f"{rec['mpoints_per_s']:.3f} Mpts/s grid="
-                 f"{'x'.join(map(str, rec['grid']))}")
+            # flat (inner_T = T) AND time-nested (inner_T = 1: T passes
+            # per deep exchange) schedules, so the regression gate covers
+            # the nested executor too
+            for inner_T in (T, 1):
+                env = {**os.environ,
+                       "XLA_FLAGS": f"--xla_force_host_platform_device_"
+                                    f"count={ndev}"}
+                env["PYTHONPATH"] = os.pathsep.join(
+                    p for p in (os.path.join(REPO, "src"), REPO,
+                                env.get("PYTHONPATH")) if p)
+                r = subprocess.run(
+                    [sys.executable, "-m", "benchmarks.fig12_scaling",
+                     "--child", "--ndev", str(ndev), "--mode", mode,
+                     "--physics", physics, "--n", str(n_base),
+                     "--nt", str(nt), "--T", str(T), "--order", str(order),
+                     "--inner-T", str(inner_T)]
+                    + (["--overlap"] if overlap else []),
+                    cwd=REPO, env=env, capture_output=True, text=True,
+                    timeout=1800)
+                if r.returncode != 0:
+                    print(f"# fig12 {mode} ndev={ndev} FAILED:\n"
+                          + r.stderr[-1500:], file=sys.stderr)
+                    raise RuntimeError(f"fig12 child failed ({mode}, "
+                                       f"{ndev})")
+                rec = json.loads(r.stdout.strip().splitlines()[-1])
+                records.append(rec)
+                emit(f"fig12_{mode}_ndev{ndev}_iT{inner_T}",
+                     rec["seconds"] * 1e6,
+                     f"{rec['mpoints_per_s']:.3f} Mpts/s grid="
+                     f"{'x'.join(map(str, rec['grid']))}")
     os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         json.dump(records, f, indent=1)
@@ -191,6 +224,9 @@ def main():
     ap.add_argument("--n", type=int, default=32)
     ap.add_argument("--nt", type=int, default=8)
     ap.add_argument("--T", type=int, default=2)
+    ap.add_argument("--inner-T", type=int, default=None, dest="inner_T",
+                    help="inner (per-pass) depth of the time-nested "
+                         "schedule; default: equal to --T (flat)")
     ap.add_argument("--order", type=int, default=4)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--overlap", action="store_true",
@@ -208,7 +244,7 @@ def main():
             "XLA_FLAGS",
             f"--xla_force_host_platform_device_count={args.ndev}")
         _child(args.ndev, args.mode, args.physics, args.n, args.nt, args.T,
-               args.order, overlap=args.overlap)
+               args.order, overlap=args.overlap, inner_T=args.inner_T)
     else:
         run(out=args.out, fast=args.fast, physics=args.physics,
             overlap=args.overlap)

@@ -23,11 +23,80 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Tuple
+from typing import Callable, List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class TBPassGeom(NamedTuple):
+    """Geometry of ONE inner pass of the time-nested schedule (DESIGN.md §4).
+
+    A depth-`T_outer` exchange tile no longer has to be consumed by one
+    inner kernel call: the inner executor runs passes of depth <= inner T,
+    each consuming `T * r` of the remaining exchanged halo, so the VMEM
+    window is sized by the INNER depth while the exchange is amortized at
+    the OUTER depth.  Pass p advances the block-plus-remaining-halo region
+    (block + 2*d_out per side after the pass) and its kernel grid is that
+    region rounded up to the inner tile (`grid`); the round-up band reads
+    zero-padded garbage that the trapezoid crops.
+
+    T:        timesteps this pass advances (= inner T, shallower on the
+              last pass when inner T does not divide the step count).
+    t0:       step offset of the pass within the inner-executor segment.
+    d_in:     halo depth of the incoming state (= d_out + T*r).
+    d_out:    halo depth still valid after the pass (0 on the last pass).
+    halo:     per-pass window overhang (T*r).
+    grid:     kernel grid = block + 2*d_out rounded up to the tile.
+    tile:     spatial tile of the pass (the inner Pallas tile).
+    ntiles:   grid / tile.
+    include_halo: whether source tables must duplicate points into every
+              window containing them (T > 1: intermediate in-pass steps
+              read injected halo values — paper Fig. 4b).
+    """
+
+    T: int
+    t0: int
+    d_in: int
+    d_out: int
+    halo: int
+    grid: Tuple[int, int]
+    tile: Tuple[int, int]
+    ntiles: Tuple[int, int]
+    include_halo: bool
+
+
+def nested_pass_geometry(block: Tuple[int, int], tile: Tuple[int, int],
+                         T_steps: int, inner_T: int, r: int
+                         ) -> List[TBPassGeom]:
+    """Split `T_steps` in-tile steps into inner passes of depth <= inner_T.
+
+    The pass depths telescope through the exchanged halo: pass p enters at
+    depth `d_in = (T_steps - t0) * r` and leaves `d_out = d_in - T*r`
+    valid, so the last pass lands exactly on the shard block.  `inner_T ==
+    T_steps` reproduces the flat single-pass schedule.  `inner_T` need not
+    divide `T_steps` (the remainder tile of `nt % T_outer` reuses the same
+    chunking); the final pass just runs shallower.
+    """
+    if T_steps < 0 or inner_T < 1:
+        raise ValueError(f"need T_steps >= 0 and inner_T >= 1, got "
+                         f"({T_steps}, {inner_T})")
+    bx, by = block
+    tx, ty = tile
+    geoms = []
+    done = 0
+    while done < T_steps:
+        Tp = min(inner_T, T_steps - done)
+        d_out = (T_steps - done - Tp) * r
+        cx = -(-(bx + 2 * d_out) // tx) * tx
+        cy = -(-(by + 2 * d_out) // ty) * ty
+        geoms.append(TBPassGeom(
+            T=Tp, t0=done, d_in=d_out + Tp * r, d_out=d_out, halo=Tp * r,
+            grid=(cx, cy), tile=(tx, ty), ntiles=(cx // tx, cy // ty),
+            include_halo=Tp > 1))
+        done += Tp
+    return geoms
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +218,44 @@ class TBPlan:
         write = tx * ty * nz * write_fields * dtype_bytes
         return (read + write) / (tx * ty * nz * self.T)
 
+    # --- time-nested pricing (inner T | outer T, DESIGN.md §4) --------------
+
+    def nested_compute_multiplier(self, block: Tuple[int, int],
+                                  outer_T: int) -> float:
+        """Redundant-compute multiplier of the time-nested schedule: this
+        plan's depth-T passes consume a depth-`outer_T*radius` exchanged
+        halo (`nested_pass_geometry`), so each pass pays its own trapezoid
+        overlap AND the still-valid outer rim it must keep advancing
+        (shrinking by T*radius per pass).  `outer_T == self.T` with a
+        block-dividing tile collapses to `overlap_factor()` — the flat
+        schedule."""
+        bx, by = block
+        tot = 0.0
+        for p in nested_pass_geometry(block, self.tile, outer_T, self.T,
+                                      self.radius):
+            inner = TBPlan(self.tile, p.T, self.radius)
+            tot += inner.overlap_factor() * p.grid[0] * p.grid[1] * p.T
+        return tot / (bx * by * outer_T)
+
+    def nested_hbm_bytes_per_point_step(self, block: Tuple[int, int],
+                                        outer_T: int, nz: int,
+                                        read_fields: int = 4,
+                                        write_fields: int = 1,
+                                        dtype_bytes: int = 4) -> float:
+        """HBM traffic of the time-nested schedule per block-point-step:
+        every pass re-reads its windows and writes back its (still rim-
+        extended) centre, so traffic is the per-pass flat traffic scaled
+        by the pass grid and averaged over the outer depth."""
+        bx, by = block
+        tot = 0.0
+        for p in nested_pass_geometry(block, self.tile, outer_T, self.T,
+                                      self.radius):
+            inner = TBPlan(self.tile, p.T, self.radius)
+            tot += inner.hbm_bytes_per_point_step(
+                nz, read_fields=read_fields, write_fields=write_fields,
+                dtype_bytes=dtype_bytes) * p.grid[0] * p.grid[1] * p.T
+        return tot / (bx * by * outer_T)
+
     # --- interconnect terms (the outer trapezoid of DESIGN.md §4) -----------
 
     def exchange_bytes_per_tile(self, block: Tuple[int, int], nz: int,
@@ -208,6 +315,15 @@ class TBPlan:
                                               * self.T)
 
 
+class SweepLog(dict):
+    """The autotune sweep log: a plain {key: entry} dict plus `best_key`,
+    the key the sweep's own strict-< argmin selected — so downstream
+    consumers (`plan_hierarchy`) never re-derive the winner with their
+    own, potentially divergent, tie-breaking."""
+
+    best_key = None
+
+
 def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
                   tiles=(16, 32, 64, 128, 256), depths=(1, 2, 4, 8, 16),
                   fields: int = 5, dtype_bytes: int = 4,
@@ -219,10 +335,12 @@ def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
                   exchange_fields: int = None,
                   exchange_lags: Tuple[int, ...] = None,
                   sweep_overlap: bool = False,
+                  outer_depths: Tuple[int, ...] = None,
                   ) -> Tuple[TBPlan, dict]:
-    """Pick (tile, T[, overlap]) minimizing modeled time/point-step under
-    the VMEM cap — the TPU collapse of the paper's Table-I autotuning
-    sweep, extended to the two-level sharded hierarchy (DESIGN.md §4).
+    """Pick (tile, T[, outer T, overlap]) minimizing modeled time per
+    point-step under the VMEM cap — the TPU collapse of the paper's
+    Table-I autotuning sweep, extended to the two-level sharded hierarchy
+    (DESIGN.md §4).
 
     Single-device terms:
       compute      = overlap_factor * flops_per_point / peak_flops
@@ -243,13 +361,26 @@ def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
                      the strips are redundant compute — only swept when
                      `sweep_overlap`)
 
+    With `outer_depths` (requires `mesh_block`) the two TIME levels
+    decouple: every candidate (tile, T) is the INNER plan (VMEM window and
+    per-pass trapezoid priced at depth T) and every `T_out` in
+    `outer_depths` with `T_out % T == 0` is a candidate EXCHANGE depth —
+    `T_out / T` inner passes consume one depth-`T_out*radius` exchange
+    over shrinking windows (`nested_pass_geometry`), so
+    compute/memory use the nested multipliers while the exchange bytes
+    and latency amortize over `T_out`.  Log keys become
+    `(tx, ty, T, T_out)` and entries carry `outer_T`/`vmem_bytes`;
+    `T_out == T` reproduces the flat joint sweep exactly.
+
     T=1 (no temporal blocking) is in the sweep, so kernels where TB cannot
     win (high space order: overlap growth beats traffic savings — the
     paper's SO-12 result) autotune back to the spatially-blocked schedule.
     A latency-dominated interconnect pushes toward deep T (fewer
     exchanges) while a bandwidth-starved one pushes back to shallow T (rim
     bytes grow with the exchange depth) — the multi-chip analogue of the
-    same trade.
+    same trade; a tight VMEM budget under a latency-dominated link is
+    where the NESTED plans win (deep outer amortization without the deep
+    VMEM window).
 
     `exchange_fields` (default `write_fields`) is how many state fields
     cross the link per exchange; `exchange_lags` (optional, per exchanged
@@ -262,55 +393,90 @@ def autotune_plan(nz: int, radius: int, vmem_budget: int = 96 * 2 ** 20,
     write_fields = 1 if write_fields is None else write_fields
     exchange_fields = (write_fields if exchange_fields is None
                        else exchange_fields)
-    best, best_cost, log = None, math.inf, {}
+    if outer_depths is not None and mesh_block is None:
+        raise ValueError("outer_depths (time-nested sweep) requires "
+                         "mesh_block")
+    best, best_cost, log = None, math.inf, SweepLog()
     for tx in tiles:
         for ty in tiles:
             for T in depths:
                 plan = TBPlan((tx, ty), T, radius)
-                if plan.vmem_bytes(nz, fields, dtype_bytes) > vmem_budget:
+                vmem = plan.vmem_bytes(nz, fields, dtype_bytes)
+                if vmem > vmem_budget:
                     continue
                 if mesh_block is not None and (
-                        plan.halo > min(mesh_block)
-                        or tx > mesh_block[0] or ty > mesh_block[1]
+                        tx > mesh_block[0] or ty > mesh_block[1]
                         or mesh_block[0] % tx or mesh_block[1] % ty):
                     continue  # infeasible inner tile on the device block
-                comp = plan.overlap_factor() * flops_per_point / peak_flops
-                mem = plan.hbm_bytes_per_point_step(
-                    nz, read_fields=read_fields, write_fields=write_fields,
-                    dtype_bytes=dtype_bytes) / hbm_bw
-                entry = {"compute_s": comp, "memory_s": mem,
-                         "overlap": plan.overlap_factor()}
-                cost = max(comp, mem)
-                if mesh_block is not None:
-                    field_depths = None
-                    if exchange_lags is not None:
-                        field_depths = tuple(max(plan.halo - lag, 0)
-                                             for lag in exchange_lags)
-                        entry["field_depths"] = field_depths
-                    comm = plan.exchange_seconds_per_point_step(
-                        mesh_block, nz, exchange_fields, link_bw,
-                        link_latency, dtype_bytes=dtype_bytes,
-                        depths=field_depths)
-                    entry["comm_s"] = comm
-                    entry["exchange_bytes"] = plan.exchange_bytes_per_tile(
-                        mesh_block, nz, exchange_fields, dtype_bytes,
-                        depths=field_depths)
-                    serial = max(cost, 0.0) + comm
-                    entry["overlap_exchange"] = False
-                    if sweep_overlap:
-                        split = plan.split_step_overhead_per_point_step(
-                            mesh_block, nz, radius, flops_per_point,
-                            peak_flops)
-                        overlapped = max(cost, comm) + split
-                        entry["split_s"] = split
-                        if overlapped < serial:
-                            entry["overlap_exchange"] = True
-                            serial = overlapped
-                    cost = serial
-                entry["cost_s"] = cost
-                log[(tx, ty, T)] = entry
-                if cost < best_cost:
-                    best, best_cost = plan, cost
+                # candidate exchange depths: the inner depth itself (the
+                # flat schedule, always in the sweep even when no entry
+                # of `outer_depths` divides by T) plus every nestable
+                # outer multiple
+                outer_cands = ((T,) if outer_depths is None else
+                               tuple(dict.fromkeys(
+                                   (T,) + tuple(To for To in outer_depths
+                                                if To % T == 0))))
+                for T_out in outer_cands:
+                    outer = TBPlan((tx, ty), T_out, radius)
+                    if mesh_block is not None and \
+                            outer.halo > min(mesh_block):
+                        continue  # exchange deeper than the shard block
+                    nested = outer_depths is not None
+                    if nested:
+                        comp = plan.nested_compute_multiplier(
+                            mesh_block, T_out) * flops_per_point / peak_flops
+                        mem = plan.nested_hbm_bytes_per_point_step(
+                            mesh_block, T_out, nz, read_fields=read_fields,
+                            write_fields=write_fields,
+                            dtype_bytes=dtype_bytes) / hbm_bw
+                    else:
+                        comp = (plan.overlap_factor() * flops_per_point
+                                / peak_flops)
+                        mem = plan.hbm_bytes_per_point_step(
+                            nz, read_fields=read_fields,
+                            write_fields=write_fields,
+                            dtype_bytes=dtype_bytes) / hbm_bw
+                    entry = {"compute_s": comp, "memory_s": mem,
+                             "overlap": plan.overlap_factor(),
+                             "vmem_bytes": vmem}
+                    cost = max(comp, mem)
+                    if mesh_block is not None:
+                        field_depths = None
+                        if exchange_lags is not None:
+                            field_depths = tuple(max(outer.halo - lag, 0)
+                                                 for lag in exchange_lags)
+                            entry["field_depths"] = field_depths
+                        comm = outer.exchange_seconds_per_point_step(
+                            mesh_block, nz, exchange_fields, link_bw,
+                            link_latency, dtype_bytes=dtype_bytes,
+                            depths=field_depths)
+                        entry["comm_s"] = comm
+                        entry["exchange_bytes"] = \
+                            outer.exchange_bytes_per_tile(
+                                mesh_block, nz, exchange_fields,
+                                dtype_bytes, depths=field_depths)
+                        serial = max(cost, 0.0) + comm
+                        entry["overlap_exchange"] = False
+                        if sweep_overlap:
+                            split = outer.split_step_overhead_per_point_step(
+                                mesh_block, nz, radius, flops_per_point,
+                                peak_flops)
+                            overlapped = max(cost, comm) + split
+                            entry["split_s"] = split
+                            if overlapped < serial:
+                                entry["overlap_exchange"] = True
+                                serial = overlapped
+                        cost = serial
+                    entry["cost_s"] = cost
+                    if nested:
+                        entry["outer_T"] = T_out
+                        log[(tx, ty, T, T_out)] = entry
+                    else:
+                        log[(tx, ty, T)] = entry
+                    if cost < best_cost:
+                        best, best_cost = plan, cost
+                        log.best_key = ((tx, ty, T, T_out) if nested
+                                        else (tx, ty, T))
     if best is None:
         raise ValueError("no plan fits the VMEM budget"
                          + ("" if mesh_block is None
@@ -450,41 +616,58 @@ class HierPlan:
     """Joint two-level temporal-blocking plan for one shard (DESIGN.md §4).
 
     inner:         the Pallas-tile plan *inside* the per-device block —
-                   `inner.T` is also the outer exchange depth (one
-                   `pallas_call` advances the whole exchanged block T
-                   steps, so the levels share the time depth).
+                   `inner.T` is the INNER (VMEM) time depth: one kernel
+                   pass advances the exchanged block `inner.T` steps.
+    outer_T:       the exchange depth — a multiple of `inner.T`;
+                   `outer_T / inner.T` inner passes consume one deep
+                   exchange over pass-by-pass-shrinking windows
+                   (`nested_pass_geometry`).  `outer_T == inner.T` is the
+                   flat (non-nested) schedule.
     block:         the per-device (bx, by) block the outer trapezoid
                    exchanges around.
     overlap:       whether the first in-tile step runs as the split
                    interior/rim schedule so the deep ppermute hides behind
-                   interior compute.
+                   interior compute (pass 0 only).
     field_depths:  per-state-field exchange depths (grid points) — the
                    per-field-halo saving; uniform depth is `halo`.
     """
 
     inner: TBPlan
+    outer_T: int
     block: Tuple[int, int]
     overlap: bool
     field_depths: Tuple[int, ...]
 
     @property
     def T(self) -> int:
-        return self.inner.T
+        """The exchange depth (what `DistTBPlan.T` executes)."""
+        return self.outer_T
+
+    @property
+    def outer(self) -> TBPlan:
+        """The outer trapezoid as a TBPlan (exchange-level pricing)."""
+        return TBPlan(self.inner.tile, self.outer_T, self.inner.radius)
 
     @property
     def halo(self) -> int:
-        return self.inner.halo
+        """Exchange depth in grid points (outer_T * r_step)."""
+        return self.outer.halo
+
+    def vmem_bytes(self, nz: int, fields: int, dtype_bytes: int = 4) -> int:
+        """Resident bytes of the INNER window — the whole point of
+        nesting: sized by `inner.T`, not the exchange depth."""
+        return self.inner.vmem_bytes(nz, fields, dtype_bytes)
 
     def exchange_bytes(self, nz: int, dtype_bytes: int = 4) -> int:
         """Bytes per deep exchange with the per-field depths."""
-        return self.inner.exchange_bytes_per_tile(
+        return self.outer.exchange_bytes_per_tile(
             self.block, nz, dtype_bytes=dtype_bytes,
             depths=self.field_depths)
 
     def exchange_bytes_uniform(self, nz: int, dtype_bytes: int = 4) -> int:
         """The uniform-depth baseline the per-field scheme is priced
         against."""
-        return self.inner.exchange_bytes_per_tile(
+        return self.outer.exchange_bytes_per_tile(
             self.block, nz, fields=len(self.field_depths),
             dtype_bytes=dtype_bytes)
 
@@ -492,25 +675,38 @@ class HierPlan:
 def plan_hierarchy(physics: str, nz: int, order: int,
                    block: Tuple[int, int], **kwargs
                    ) -> Tuple[HierPlan, dict]:
-    """Jointly autotune the outer exchange depth, inner Pallas tile and
+    """Jointly autotune the outer exchange depth, inner (tile, T) and
     overlap choice for one per-device block — the hierarchical search the
     parameterised time-tiling literature (Kukreja et al., PAPERS.md) shows
     must not be done level-by-level.
 
     Thin wrapper over `plan_for_physics(..., mesh_block=block,
-    sweep_overlap=True)` that re-packages the winning sweep entry as a
-    `HierPlan`; `distributed/halo.py` turns it into a `DistTBPlan` via
-    `dist_plan_from_hier`.
+    sweep_overlap=True, outer_depths=depths)` that re-packages the winning
+    sweep entry as a `HierPlan`; `distributed/halo.py` turns it into a
+    `DistTBPlan` via `dist_plan_from_hier`.  The sweep is 4-dimensional
+    (log keys `(tx, ty, inner_T, outer_T)`): the VMEM window and per-pass
+    trapezoid are priced at the inner depth while the exchange amortizes
+    at the outer depth, so very deep exchanges no longer drag the VMEM
+    window up with them.
     """
     kwargs.setdefault("sweep_overlap", True)
+    kwargs.setdefault("outer_depths", kwargs.get("depths", (1, 2, 4, 8, 16)))
+    pc = PHYSICS_COSTS[physics]
     plan, log = plan_for_physics(physics, nz, order, mesh_block=block,
                                  **kwargs)
-    pc = PHYSICS_COSTS[physics]
-    entry = log[(plan.tile[0], plan.tile[1], plan.T)]
+    # the sweep's own winner over the full 4-tuple key space
+    # (autotune_plan's returned TBPlan only carries the inner level)
+    key = log.best_key
+    entry = log[key]
+    tx, ty, inner_T = key[0], key[1], key[2]
+    outer_T = entry.get("outer_T", inner_T)
+    inner = TBPlan((tx, ty), inner_T, pc.step_radius(order))
+    outer_halo = outer_T * pc.step_radius(order)
     depths = entry.get("field_depths",
-                       tuple(max(plan.halo - lag, 0)
+                       tuple(max(outer_halo - lag, 0)
                              for lag in pc.exchange_lags(order)))
-    return (HierPlan(inner=plan, block=(int(block[0]), int(block[1])),
+    return (HierPlan(inner=inner, outer_T=outer_T,
+                     block=(int(block[0]), int(block[1])),
                      overlap=bool(entry.get("overlap_exchange", False)),
                      field_depths=tuple(depths)),
             log)

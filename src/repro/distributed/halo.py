@@ -27,6 +27,17 @@ jointly by `core.temporal_blocking.plan_hierarchy`):
                       its jnp oracle (`inner="jnp"`), which loops the SAME
                       per-window schedule in pure jnp.
 
+The two TIME depths are decoupled (time-nesting, DESIGN.md §4): the inner
+`TBPlan.T` may be any depth up to the outer exchange depth `T`, in which
+case `ceil(T / inner.T)` inner passes consume ONE deep exchange, each pass
+advancing the block plus the still-remaining halo (windows shrink by
+`inner.T * r_step` per pass — `core.temporal_blocking.nested_pass_geometry`)
+— so a very deep, latency-amortizing exchange no longer drags the kernel's
+VMEM window up with it.  Each pass gets its own source/receiver binning
+(tile origins shift with the remaining depth); the pass grid is rounded up
+to the inner tile with a zero-padded garbage band the trapezoid crops.
+`inner.T == T` is the flat single-pass schedule.
+
 With `overlap=True` the deep exchange is double-buffered against compute:
 the first in-tile step splits into an interior update of the un-exchanged
 local block (data-independent of the ppermute, so XLA's latency-hiding
@@ -41,15 +52,17 @@ step specs that `kernels/ops._tb_propagate` uses, so one driver advances
 acoustic (2 state fields), TTI (4) and elastic (9) — there is no
 per-physics distributed stencil loop to keep in sync.
 
-Source/receiver handling is the paper's §II machinery sharded by owner:
-`sources.tile_source_tables` / `tile_receiver_tables` binned at the INNER
-tile granularity (tile = `inner_plan.tile`, every affected point duplicated
-into any window whose halo contains it, paper Fig. 4b) and every receiver
-gather entry into the owning tile; each shard records *partial* per-step
-receiver samples which the driver segment-sums by receiver id
-(`ops.combine_rec_partials`) — so receiver traces are per-step at any T,
-and `nt % T != 0` runs a shallower remainder tile exactly like the
-single-device driver.
+Source/receiver handling is the paper's §II machinery sharded by owner,
+bound at the INNER tile granularity with one binning PER PASS
+(`_pass_source_tables` / `_pass_receiver_tables` — the pass grids are
+per-shard and overlap across shards, so they bin directly into the
+(px, py, tiles, cap, ...) layout): every affected point is duplicated
+into any window that contains it (paper Fig. 4b) and every receiver
+gather entry lands once, in the owning shard's owning tile; each shard
+records *partial* per-step receiver samples which the driver segment-sums
+by receiver id (`ops.combine_rec_partials`) — so receiver traces are
+per-step at any T, and `nt % T != 0` runs a shallower remainder tile
+exactly like the single-device driver, nested passes included.
 
 Mesh layout: grid x -> "data" axis, grid y -> "model" axis.  Exchanges are
 `lax.ppermute` shifts; missing neighbors (domain boundary) produce zeros =
@@ -72,8 +85,11 @@ try:  # jax >= 0.4.38 exposes shard_map at the top level
 except AttributeError:
     from jax.experimental.shard_map import shard_map as _shard_map
 
+import numpy as np
+
 from repro.core import sources as src_mod
-from repro.core.temporal_blocking import HierPlan, TBPlan
+from repro.core.temporal_blocking import (HierPlan, TBPassGeom, TBPlan,
+                                          nested_pass_geometry)
 from repro.kernels import ops as ops_mod
 from repro.kernels import tb_physics as phys
 
@@ -109,27 +125,34 @@ def _shift_from_high(x, h: int, axis_name: str, dim: int):
                                   if i + 1 <= n - 1])
 
 
-def halo_exchange(x, h: int, axis_name: str, dim: int):
-    """Pad the local block with depth-h halos from both neighbors."""
-    lo = _shift_from_low(x, h, axis_name, dim)
-    hi = _shift_from_high(x, h, axis_name, dim)
+def halo_exchange(x, h: int, axis_name: str, dim: int, shift_fns=None):
+    """Pad the local block with depth-h halos from both neighbors.
+
+    `shift_fns` (default: the ppermute pair above) injects the two
+    neighbor-strip providers `(from_low, from_high)` — tests and oracles
+    substitute collective-free simulators so the concat/zero-band algebra
+    is exercised with real neighbor data on one device."""
+    from_low, from_high = shift_fns or (_shift_from_low, _shift_from_high)
+    lo = from_low(x, h, axis_name, dim)
+    hi = from_high(x, h, axis_name, dim)
     return jnp.concatenate([lo, x, hi], axis=dim)
 
 
-def halo_exchange_2d(x, h: int, ax_x: str, ax_y: str):
+def halo_exchange_2d(x, h: int, ax_x: str, ax_y: str, shift_fns=None):
     """x then y (the second exchange carries the x-halo -> corners filled)."""
-    x = halo_exchange(x, h, ax_x, 0)
-    return halo_exchange(x, h, ax_y, 1)
+    x = halo_exchange(x, h, ax_x, 0, shift_fns=shift_fns)
+    return halo_exchange(x, h, ax_y, 1, shift_fns=shift_fns)
 
 
-def exchange_to_depth(x, depth: int, h: int, ax_x: str, ax_y: str):
+def exchange_to_depth(x, depth: int, h: int, ax_x: str, ax_y: str,
+                      shift_fns=None):
     """Exchange a depth-`depth` halo, then zero-pad out to the uniform
     window depth `h` — the per-field deep exchange (DESIGN.md §4).  Cells
     in the zero band are only ever read into values the trapezoid discards
     (`TBPhysics.halo_lags` is derived from exactly that dependency cone);
     `depth == 0` skips the ppermute rounds entirely."""
     if depth > 0:
-        x = halo_exchange_2d(x, depth, ax_x, ax_y)
+        x = halo_exchange_2d(x, depth, ax_x, ax_y, shift_fns=shift_fns)
     if h > depth:
         pad = h - depth
         x = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
@@ -149,10 +172,14 @@ class DistTBPlan(NamedTuple):
 
     `inner_plan` is the inner level of the two-level hierarchy: its tile
     spatially tiles the shard block inside the per-shard schedule (both
-    executors), and its T must equal the outer exchange depth `T` (one
-    inner pass advances the whole exchanged block T steps).  `None` means
-    one tile covering the block.  Build from the joint autotuner with
-    `dist_plan_from_hier`.
+    executors), and its T is the INNER time depth — any depth up to the
+    outer exchange depth `T`.  When `inner_plan.T < T`, the executor runs
+    `ceil(T / inner_plan.T)` inner passes per deep exchange, each
+    consuming `inner_plan.T * r_step` of the remaining halo so the
+    advanced window shrinks pass by pass (time-nesting); the VMEM window
+    is sized by the inner depth while the exchange amortizes at `T`.
+    `None` means one flat pass with one tile covering the block.  Build
+    from the joint autotuner with `dist_plan_from_hier`.
     """
 
     mesh: Mesh
@@ -195,6 +222,12 @@ class DistTBPlan(NamedTuple):
         return self.inner_plan.tile if self.inner_plan is not None \
             else self.block
 
+    @property
+    def inner_T(self) -> int:
+        """Inner (per-pass) time depth; equals the exchange depth `T`
+        for the flat single-pass schedule."""
+        return self.inner_plan.T if self.inner_plan is not None else self.T
+
     def field_depths(self, T_depth: int) -> Tuple[int, ...]:
         """Per-state-field exchange depth for a depth-`T_depth` tile."""
         if not self.per_field_halo:
@@ -222,11 +255,12 @@ class DistTBPlan(NamedTuple):
                 raise ValueError(
                     f"inner tile {self.inner_plan.tile} must divide the "
                     f"shard block ({bx}, {by})")
-            if self.inner_plan.T != self.T:
+            if not 1 <= self.inner_plan.T <= self.T:
                 raise ValueError(
-                    f"inner plan depth T={self.inner_plan.T} must equal the "
-                    f"outer exchange depth T={self.T} (one inner pass per "
-                    f"deep exchange)")
+                    f"inner plan depth T={self.inner_plan.T} must lie in "
+                    f"[1, outer T={self.T}]: ceil(T / inner_T) inner "
+                    f"passes consume one deep exchange (time-nested "
+                    f"schedule)")
 
 
 def dist_plan_from_hier(mesh: Mesh, grid_shape: Tuple[int, int, int],
@@ -295,57 +329,88 @@ def _jnp_window_tile(physics: phys.TBPhysics, sspec: _StepSpec, T: int,
             jnp.stack(recs, axis=0))
 
 
-def _run_inner(plan: DistTBPlan, T_steps: int, h_in: int, state_pads,
-               param_pads, dom, s_coords, s_vals, r_coords, r_w,
-               interpret: bool):
-    """Advance the exchanged shard block `T_steps` steps through the inner
-    trapezoid, spatially tiled by `plan.inner_tile`.
+def _run_pass(plan: DistTBPlan, geom: TBPassGeom, state_pads, param_pads,
+              dom_pad, h_full: int, s_coords, s_vals, r_coords, r_w,
+              interpret: bool):
+    """Advance ONE inner pass of the time-nested schedule (DESIGN.md §4).
 
-    Tables are per inner tile: s_coords (ntiles, cap, 3) window-local,
-    s_vals (ntiles, T_steps, cap), r_coords/r_w likewise.  Returns
-    (state blocks tuple, rec partials (ntx, nty, T_steps, capr, chan)).
+    The incoming state is the shard block padded to the remaining halo
+    depth `geom.d_in`; the pass advances `geom.T` steps over the region
+    that stays valid afterwards (`block + 2*geom.d_out`, rounded up to the
+    inner tile with a zero-padded garbage band the crop discards) and
+    returns the state cropped to depth `geom.d_out` — the next pass's
+    input, landing exactly on the block at the last pass.  `param_pads` /
+    `dom_pad` stay at the full exchange depth `h_full` and are sliced to
+    the pass window here (params' round-up band carries `param_fills` so
+    updates stay finite in the garbage region).
+
+    Tables are per pass-local tile: s_coords (ntiles, cap, 3) window-local,
+    s_vals (ntiles, geom.T, cap), r_coords/r_w likewise.  Returns
+    (state tuple at depth d_out, rec partials (ntiles, geom.T, capr, chan)).
     """
     physics = plan.physics
-    itx, ity = plan.inner_tile
-    wx, wy, nz = state_pads[0].shape
-    bx, by = wx - 2 * h_in, wy - 2 * h_in
-    ntx, nty = bx // itx, by // ity
+    bx, by = plan.block
+    nz = state_pads[0].shape[2]
+    tx, ty = geom.tile
+    cx, cy = geom.grid
+    hp = geom.halo
+    keep = (bx + 2 * geom.d_out, by + 2 * geom.d_out)
+    ex, ey = cx - keep[0], cy - keep[1]
+    fills = dict(physics.param_fills)
+
+    def fit(a, crop, fill):
+        if crop:
+            a = a[crop:a.shape[0] - crop, crop:a.shape[1] - crop]
+        if ex or ey:
+            a = jnp.pad(a, ((0, ex), (0, ey), (0, 0)),
+                        constant_values=jnp.asarray(fill, a.dtype))
+        return a
+
+    crop_p = h_full - geom.d_in
+    spads = tuple(fit(a, 0, 0.0) for a in state_pads)
+    ppads = tuple(fit(a, crop_p, fills.get(f, 0.0))
+                  for f, a in zip(physics.param_fields, param_pads))
+    dom = fit(dom_pad, crop_p, 0.0)
+    ntx, nty = geom.ntiles
     if plan.inner == "pallas":
-        # One pallas_call whose grid tiles the exchanged block; the shard's
+        # One pallas_call whose grid tiles the pass window; the shard's
         # dom_pad rides along as one more HBM window and is sliced at the
         # same per-tile window origin as the fields (stencil_tb).
         from repro.kernels import stencil_tb as ker
-        spec = ops_mod.make_inner_spec(
-            (bx, by), nz, (itx, ity), T_steps, plan.order, float(plan.dt),
+        spec = ops_mod.pass_inner_spec(
+            geom, nz, plan.order, float(plan.dt),
             tuple(float(s) for s in plan.spacing), s_coords.shape[1],
-            r_coords.shape[1], state_pads[0].dtype, physics)
+            r_coords.shape[1], spads[0].dtype, physics)
         new, rec = ker.tb_time_tile(
-            spec, physics, state_pads, param_pads, s_coords, s_vals,
+            spec, physics, spads, ppads, s_coords, s_vals,
             r_coords, r_w, dom_pad=dom, interpret=interpret)
-        return new, rec
-    # jnp oracle: the SAME per-window schedule as the kernel grid, looped
-    # in pure jnp (ntx*nty windows, each with its own trapezoidal halo)
-    sspec = _StepSpec(float(plan.dt), tuple(float(s) for s in plan.spacing),
-                      plan.order)
-    outs = [jnp.zeros((bx, by, nz), p.dtype) for p in state_pads]
-    rec_rows = []
-    for ti in range(ntx):
-        row = []
-        for tj in range(nty):
-            k = ti * nty + tj
-            slx = slice(ti * itx, ti * itx + itx + 2 * h_in)
-            sly = slice(tj * ity, tj * ity + ity + 2 * h_in)
-            wpads = tuple(p[slx, sly] for p in state_pads)
-            wpar = tuple(p[slx, sly] for p in param_pads)
-            new, rec = _jnp_window_tile(
-                physics, sspec, T_steps, h_in, wpads, wpar, dom[slx, sly],
-                s_coords[k], s_vals[k], r_coords[k], r_w[k])
-            for i, centre in enumerate(new):
-                outs[i] = outs[i].at[ti * itx:(ti + 1) * itx,
-                                     tj * ity:(tj + 1) * ity, :].set(centre)
-            row.append(rec)
-        rec_rows.append(jnp.stack(row, axis=0))
-    return tuple(outs), jnp.stack(rec_rows, axis=0)
+    else:
+        # jnp oracle: the SAME per-window schedule as the kernel grid,
+        # looped in pure jnp (ntx*nty windows, each with its own halo)
+        sspec = _StepSpec(float(plan.dt),
+                          tuple(float(s) for s in plan.spacing), plan.order)
+        outs = [jnp.zeros((cx, cy, nz), p.dtype) for p in spads]
+        rec_rows = []
+        for ti in range(ntx):
+            row = []
+            for tj in range(nty):
+                k = ti * nty + tj
+                slx = slice(ti * tx, ti * tx + tx + 2 * hp)
+                sly = slice(tj * ty, tj * ty + ty + 2 * hp)
+                wpads = tuple(p[slx, sly] for p in spads)
+                wpar = tuple(p[slx, sly] for p in ppads)
+                out_w, rec = _jnp_window_tile(
+                    physics, sspec, geom.T, hp, wpads, wpar, dom[slx, sly],
+                    s_coords[k], s_vals[k], r_coords[k], r_w[k])
+                for i, centre in enumerate(out_w):
+                    outs[i] = outs[i].at[ti * tx:(ti + 1) * tx,
+                                         tj * ty:(tj + 1) * ty, :].set(centre)
+                row.append(rec)
+            rec_rows.append(jnp.stack(row, axis=0))
+        new, rec = tuple(outs), jnp.stack(rec_rows, axis=0)
+    new = tuple(a[:keep[0], :keep[1]] for a in new)
+    rec = rec.reshape(ntx * nty, geom.T, rec.shape[-2], rec.shape[-1])
+    return new, rec
 
 
 def _split_first_step(plan: DistTBPlan, sspec: _StepSpec, h: int,
@@ -417,56 +482,148 @@ def _split_first_step(plan: DistTBPlan, sspec: _StepSpec, h: int,
 
 
 # ---------------------------------------------------------------------------
-# Host-side table sharding
+# Host-side per-pass table binning
 # ---------------------------------------------------------------------------
 
-def _shard_table(arr, px: int, py: int, ntx_loc: int, nty_loc: int):
-    """(ntx_glob*nty_glob, ...) host table -> (px, py, ntiles_loc, ...):
-    global row-major tile order is (shard_x, tile_x, shard_y, tile_y)."""
-    lead = arr.shape[1:]
-    a = arr.reshape(px, ntx_loc, py, nty_loc, *lead)
-    a = jnp.transpose(a, (0, 2, 1, 3) + tuple(range(4, 4 + len(lead))))
-    return a.reshape(px, py, ntx_loc * nty_loc, *lead)
+def _pass_source_tables(plan: DistTBPlan, g, geom: TBPassGeom):
+    """Sharded (px, py, ntiles, ...) source tables for one inner pass.
 
+    The pass's tile grid is per-shard and shifted by the remaining depth
+    (`geom.d_out`) off the shard origin, so (unlike the flat schedule)
+    it is NOT a partition of the global grid: the extended windows of
+    neighbouring shards overlap and every affected point is duplicated
+    into every (shard, tile) window that contains it — the sharded
+    generalization of `sources.tile_source_tables(include_halo=True)`
+    (paper Fig. 4b).  Depth-1 passes bin by tile centre instead (the
+    injection only has to cover what the crop keeps).
 
-def _global_partials(parts, px: int, py: int, ntx_loc: int, nty_loc: int):
-    """(px, py, ntx_loc, nty_loc, T, cap, chan) shard partials back to the
-    (ntx_glob, nty_glob, T, cap, chan) layout `ops.combine_rec_partials`
-    expects against the global receiver table."""
-    T, cap, chan = parts.shape[4:]
-    a = jnp.transpose(parts, (0, 2, 1, 3, 4, 5, 6))
-    return a.reshape(px * ntx_loc, py * nty_loc, T, cap, chan)
-
-
-def _inner_source_tables(plan: DistTBPlan, g, tile, h, include_halo,
-                         ntx_loc, nty_loc):
-    """Sharded (px, py, ntiles_loc, ...) source tables at one binning."""
+    Returns (coords (px, py, ntl, cap, 3) window-local int32,
+             sid    (px, py, ntl, cap) int32, -1 padding,
+             mask   (px, py, ntl, cap) float32 1/0 validity — the physical
+             injection scale is gathered in-graph from sid).
+    """
     px, py = plan.pgrid
-    ntl = ntx_loc * nty_loc
+    ntx, nty = geom.ntiles
+    ntl = ntx * nty
     if g is None:
         return (jnp.zeros((px, py, ntl, 1, 3), jnp.int32),
                 jnp.full((px, py, ntl, 1), -1, jnp.int32),
                 jnp.zeros((px, py, ntl, 1), jnp.float32))
-    tab = src_mod.tile_source_tables(g, plan.grid_shape, tile, h,
-                                     include_halo=include_halo)
-    return (_shard_table(tab.coords, px, py, ntx_loc, nty_loc),
-            _shard_table(tab.sid, px, py, ntx_loc, nty_loc),
-            _shard_table(tab.scale, px, py, ntx_loc, nty_loc))
+    bx, by = plan.block
+    tx, ty = geom.tile
+    hp = geom.halo
+    d = geom.d_out
+    pts = np.asarray(g.points)
+
+    def axis_ranges(v, b, t, n_shard, n_tile):
+        """(shard, tile) pairs along ONE axis whose window [shard*b +
+        tile*t - d - hp, ... + t + 2*hp) (or centre, for depth-1 passes)
+        contains coordinate v — O(pairs), not O(windows)."""
+        out = []
+        pad = 0 if geom.include_halo else hp  # centre binning: shrink by hp
+        span = t + 2 * (hp - pad)
+        # shard s covers v iff s*b - d - hp + pad <= v < s*b - d - hp +
+        # pad + (n_tile-1)*t + span
+        s_lo = max(0, (v - (n_tile - 1) * t - span + d + hp - pad) // b + 1)
+        s_hi = min(n_shard - 1, (v + d + hp - pad) // b)
+        for s in range(s_lo, s_hi + 1):
+            u = v - (s * b - d - hp + pad)   # offset from tile-0 window lo
+            t_lo = max(0, -(-(u - span + 1) // t))
+            t_hi = min(n_tile - 1, u // t)
+            for k in range(t_lo, t_hi + 1):
+                out.append((s, k))
+        return out
+
+    pairs = []  # ((sx, sy, tile_id), point_idx)
+    for p in range(pts.shape[0]):
+        x, y = int(pts[p, 0]), int(pts[p, 1])
+        for sx, ti in axis_ranges(x, bx, tx, px, ntx):
+            for sy, tj in axis_ranges(y, by, ty, py, nty):
+                pairs.append(((sx, sy, ti * nty + tj), p))
+    counts = {}
+    for key, _ in pairs:
+        counts[key] = counts.get(key, 0) + 1
+    cap = max(1, max(counts.values(), default=1))
+    coords = np.zeros((px, py, ntl, cap, 3), np.int32)
+    sid = np.full((px, py, ntl, cap), -1, np.int32)
+    mask = np.zeros((px, py, ntl, cap), np.float32)
+    fill = np.zeros((px, py, ntl), np.int32)
+    for (sx, sy, t), p in pairs:
+        k = fill[sx, sy, t]
+        fill[sx, sy, t] = k + 1
+        ti, tj = t // nty, t % nty
+        ox = sx * bx + ti * tx - d - hp
+        oy = sy * by + tj * ty - d - hp
+        coords[sx, sy, t, k] = (pts[p, 0] - ox, pts[p, 1] - oy, pts[p, 2])
+        sid[sx, sy, t, k] = p
+        mask[sx, sy, t, k] = 1.0
+    return jnp.asarray(coords), jnp.asarray(sid), jnp.asarray(mask)
 
 
-def _inner_receiver_tables(plan: DistTBPlan, receivers, tile, h,
-                           ntx_loc, nty_loc):
-    """(global rtab | None, sharded coords, sharded weights)."""
+def _pass_receiver_tables(plan: DistTBPlan, receivers, geom: TBPassGeom):
+    """Sharded receiver gather entries for one inner pass.
+
+    Each (receiver, grid point) pair is recorded exactly once per step:
+    by the shard that OWNS the point and the pass tile whose centre
+    contains it (owned points sit deep enough inside every pass window to
+    be valid at every in-pass step).  Returns (coords, weight) as sharded
+    jnp arrays plus the host-side rid table `_combine_pass` segment-sums
+    partials with.
+    """
     px, py = plan.pgrid
-    ntl = ntx_loc * nty_loc
+    ntx, nty = geom.ntiles
+    ntl = ntx * nty
     if receivers is None:
-        return (None,
-                jnp.zeros((px, py, ntl, 1, 3), jnp.int32),
-                jnp.zeros((px, py, ntl, 1), jnp.float32))
-    rtab = src_mod.tile_receiver_tables(receivers, plan.grid_shape, tile, h)
-    return (rtab,
-            _shard_table(rtab.coords, px, py, ntx_loc, nty_loc),
-            _shard_table(rtab.weight, px, py, ntx_loc, nty_loc))
+        return (jnp.zeros((px, py, ntl, 1, 3), jnp.int32),
+                jnp.zeros((px, py, ntl, 1), jnp.float32),
+                np.full((px, py, ntl, 1), -1, np.int32))
+    idx = np.asarray(receivers.indices).reshape(-1, 3)
+    w = np.asarray(receivers.weights, np.float64).reshape(-1)
+    rids = np.repeat(np.arange(receivers.num, dtype=np.int32),
+                     receivers.indices.shape[1])
+    keep = w != 0.0
+    idx, w, rids = idx[keep], w[keep], rids[keep]
+    bx, by = plan.block
+    tx, ty = geom.tile
+    hp = geom.halo
+    d = geom.d_out
+    sx = idx[:, 0] // bx
+    sy = idx[:, 1] // by
+    cxl = idx[:, 0] - sx * bx + d        # pass-grid-local x in [d, bx + d)
+    cyl = idx[:, 1] - sy * by + d
+    ti, tj = cxl // tx, cyl // ty
+    t = ti * nty + tj
+    flat = (sx * py + sy) * ntl + t
+    counts = np.bincount(flat, minlength=px * py * ntl)
+    cap = max(1, int(counts.max(initial=0)))
+    coords = np.zeros((px, py, ntl, cap, 3), np.int32)
+    weight = np.zeros((px, py, ntl, cap), np.float32)
+    rid = np.full((px, py, ntl, cap), -1, np.int32)
+    fill = np.zeros(px * py * ntl, np.int32)
+    for p in range(idx.shape[0]):
+        k = fill[flat[p]]
+        fill[flat[p]] += 1
+        coords[sx[p], sy[p], t[p], k] = (cxl[p] - ti[p] * tx + hp,
+                                         cyl[p] - tj[p] * ty + hp,
+                                         idx[p, 2])
+        weight[sx[p], sy[p], t[p], k] = w[p]
+        rid[sx[p], sy[p], t[p], k] = rids[p]
+    return jnp.asarray(coords), jnp.asarray(weight), rid
+
+
+class _RidTab(NamedTuple):
+    """The slice of a receiver table `ops.combine_rec_partials` reads."""
+
+    rid: jnp.ndarray
+
+
+def _combine_pass(parts, rid, nrec: int):
+    """(px, py, ntl, T, capr, chan) shard partials + host rid table ->
+    (T, nrec, chan) per-step samples (segment sum over receiver ids)."""
+    px, py, ntl, T, capr, chan = parts.shape
+    flat = parts.reshape(px * py * ntl, 1, T, capr, chan)
+    tab = _RidTab(rid=jnp.asarray(rid.reshape(px * py * ntl, capr)))
+    return ops_mod.combine_rec_partials(flat, tab, nrec)
 
 
 # ---------------------------------------------------------------------------
@@ -498,38 +655,39 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
     bx, by = plan.block
     r = plan.r_step
     h = T_depth * r
-    itx, ity = plan.inner_tile
-    ntx_loc, nty_loc = bx // itx, by // ity
     overlap = plan.overlap
     T_rest = T_depth - 1 if overlap else T_depth  # steps the inner exec runs
-    h_in = T_rest * r
     depths = plan.field_depths(T_depth)
     nrec = receivers.num if receivers is not None else 0
     nchan = physics.rec_channels
     spec3 = P(plan.ax_x, plan.ax_y, None)
 
-    # --- host-side owner-sharded source/receiver tables ---------------------
-    extra, extra_specs = [], []
-    rtab_in = rtab_o = None
-    if T_rest > 0:
-        in_sc, in_sid, in_smask = _inner_source_tables(
-            plan, g, (itx, ity), h_in, T_rest > 1, ntx_loc, nty_loc)
-        rtab_in, in_rc, in_rw = _inner_receiver_tables(
-            plan, receivers, (itx, ity), h_in, ntx_loc, nty_loc)
-        extra += [in_sc, in_sid, in_smask, in_rc, in_rw]
-        extra_specs += [P(plan.ax_x, plan.ax_y, *(None,) * (a.ndim - 2))
-                        for a in extra[-5:]]
+    # --- the time-nested pass schedule: T_rest steps in inner-depth chunks
+    # over pass-by-pass-shrinking windows (flat = one pass) ------------------
+    geoms = nested_pass_geometry((bx, by), plan.inner_tile, T_rest,
+                                 min(plan.inner_T, max(T_rest, 1)), r)
+
+    # --- host-side owner-sharded source/receiver tables, one binning per
+    # pass (the tile origins shift with the remaining depth d_out) -----------
+    extra = []
+    pass_rids = []
+    for geom in geoms:
+        sc, sid, smask = _pass_source_tables(plan, g, geom)
+        rc, rw, rid = _pass_receiver_tables(plan, receivers, geom)
+        pass_rids.append(rid)
+        extra += [sc, sid, smask, rc, rw]
+    o_rid = None
     if overlap:
         # shard-level tables for the split first step (window = the whole
         # exchanged block, one "tile" per shard)
-        o_sc, o_sid, o_smask = _inner_source_tables(
-            plan, g, (bx, by), h, T_depth > 1, 1, 1)
-        rtab_o, o_rc, o_rw = _inner_receiver_tables(
-            plan, receivers, (bx, by), h, 1, 1)
-        o_tabs = [a[:, :, 0] for a in (o_sc, o_sid, o_smask, o_rc, o_rw)]
-        extra += o_tabs
-        extra_specs += [P(plan.ax_x, plan.ax_y, *(None,) * (a.ndim - 2))
-                        for a in o_tabs]
+        og = TBPassGeom(T=1, t0=0, d_in=h, d_out=0, halo=h, grid=(bx, by),
+                        tile=(bx, by), ntiles=(1, 1),
+                        include_halo=T_depth > 1)
+        o_sc, o_sid, o_smask = _pass_source_tables(plan, g, og)
+        o_rc, o_rw, o_rid = _pass_receiver_tables(plan, receivers, og)
+        extra += [o_sc, o_sid, o_smask, o_rc, o_rw]
+    extra_specs = [P(plan.ax_x, plan.ax_y, *(None,) * (a.ndim - 2))
+                   for a in extra]
 
     # --- time-invariant param halos (exchanged once per depth) --------------
     fills = dict(physics.param_fills)
@@ -558,9 +716,9 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
                 + tuple(extra_specs) + (P(None, None), P(None)))
     out_specs = (spec3,) * ns
     if overlap:
-        out_specs += (P(plan.ax_x, plan.ax_y, None, None, None),)
-    if T_rest > 0:
-        out_specs += (P(plan.ax_x, plan.ax_y, None, None, None, None, None),)
+        out_specs += (P(plan.ax_x, plan.ax_y, None, None, None, None),)
+    out_specs += (P(plan.ax_x, plan.ax_y, None, None, None, None),) \
+        * len(geoms)
 
     def _gather_vals(win, sid, smask, scale_vec, dtype):
         """(T, npts) decomposed wavelets -> per-tile (tiles..., T, cap)
@@ -580,11 +738,12 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
         ppads = args[ns:ns + npar]
         dom = args[ns + npar]
         rest = list(args[ns + npar + 1:])
-        if T_rest > 0:
-            isc, isid, ismask, irc, irw = [a[0, 0] for a in rest[:5]]
+        ptabs = []
+        for _ in geoms:
+            ptabs.append([a[0, 0] for a in rest[:5]])
             rest = rest[5:]
         if overlap:
-            osc, osid, osmask, orc, orw = [a[0, 0] for a in rest[:5]]
+            osc, osid, osmask, orc, orw = [a[0, 0, 0] for a in rest[:5]]
             rest = rest[5:]
         src_win, scale_vec = rest
         dtype = sblocks[0].dtype
@@ -592,32 +751,28 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
         # depths zero-padded to the uniform window
         spads = tuple(exchange_to_depth(b, d, h, plan.ax_x, plan.ax_y)
                       for b, d in zip(sblocks, depths))
-        outs = []
+        rec_outs = []
+        off = 0
         if overlap:
             sv0 = (src_win[0][jnp.maximum(osid, 0)]
                    * (scale_vec[jnp.maximum(osid, 0)] * osmask)).astype(dtype)
             state1, rec1 = _split_first_step(
                 plan, sspec, h, sblocks, spads, ppads, dom, osc, sv0,
                 orc, orw)
-            if T_rest > 0:
-                crop = (slice(r, -r), slice(r, -r))
-                new, parts = _run_inner(
-                    plan, T_rest, h_in,
-                    tuple(a[crop] for a in state1),
-                    tuple(p[crop] for p in ppads), dom[crop],
-                    isc, _gather_vals(src_win[1:], isid, ismask, scale_vec,
-                                      dtype),
-                    irc, irw, interpret)
-                outs = [*new, rec1[None, None], parts[None, None]]
-            else:  # T_depth == 1: the split step IS the tile
-                new = tuple(a[r:-r, r:-r] for a in state1)
-                outs = [*new, rec1[None, None]]
+            rec_outs.append(rec1[None, None, None])
+            # depth h - r = T_rest * r: exactly the first pass's d_in
+            state = tuple(a[r:-r, r:-r] for a in state1)
+            off = 1
         else:
-            sv = _gather_vals(src_win, isid, ismask, scale_vec, dtype)
-            new, parts = _run_inner(plan, T_depth, h, spads, ppads, dom,
-                                    isc, sv, irc, irw, interpret)
-            outs = [*new, parts[None, None]]
-        return tuple(outs)
+            state = spads
+        for geom, tabs in zip(geoms, ptabs):
+            isc, isid, ismask, irc, irw = tabs
+            sv = _gather_vals(src_win[off + geom.t0:off + geom.t0 + geom.T],
+                              isid, ismask, scale_vec, dtype)
+            state, parts = _run_pass(plan, geom, state, ppads, dom, h,
+                                     isc, sv, irc, irw, interpret)
+            rec_outs.append(parts[None, None])
+        return (*state, *rec_outs)
 
     def run_tile(state, src_win, scale_vec):
         outs = tile(*state, *param_pads, dom_pad, *extra, src_win, scale_vec)
@@ -626,18 +781,15 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
     def combine(partials):
         """Shard partials -> (T_depth, nrec, nchan) per-step samples."""
         if receivers is None:
-            dtype = jnp.float32
-            return jnp.zeros((T_depth, 0, nchan), dtype)
+            return jnp.zeros((T_depth, 0, nchan), jnp.float32)
         recs = []
         idx = 0
         if overlap:
-            recs.append(ops_mod.combine_rec_partials(partials[idx], rtab_o,
-                                                     nrec))
+            recs.append(_combine_pass(partials[0], o_rid, nrec))
+            idx = 1
+        for geom, rid in zip(geoms, pass_rids):
+            recs.append(_combine_pass(partials[idx], rid, nrec))
             idx += 1
-        if T_rest > 0:
-            gparts = _global_partials(partials[idx], px, py, ntx_loc,
-                                      nty_loc)
-            recs.append(ops_mod.combine_rec_partials(gparts, rtab_in, nrec))
         return recs[0] if len(recs) == 1 else jnp.concatenate(recs, axis=0)
 
     return run_tile, combine
@@ -657,7 +809,8 @@ def sharded_tb_propagate(plan: DistTBPlan, nt: int,
     handles layout via the shard_map specs).  `nt` need not divide by
     `plan.T`; the remainder runs as a shallower tile with its own
     (smaller) exchange depth, mirroring `kernels/ops._tb_propagate`.
-    The schedule — inner spatial tiling, per-field exchange depths,
+    The schedule — inner spatial tiling, inner time depth (time-nested
+    passes when `inner_plan.T < T`), per-field exchange depths,
     overlapped exchange — comes from the plan and never changes results,
     only data movement (tested across all combinations).
 
@@ -712,9 +865,12 @@ def sharded_tb_propagate(plan: DistTBPlan, nt: int,
         recs_main = recs_main.reshape(n_main * plan.T, -1, nchan)
 
     if rem > 0:
+        # the remainder tile nests the same way: passes of the SAME inner
+        # depth (clamped when the remainder is shallower than one pass)
         rplan = plan._replace(
-            T=rem, inner_plan=(dataclasses.replace(plan.inner_plan, T=rem)
-                               if plan.inner_plan is not None else None))
+            T=rem, inner_plan=(dataclasses.replace(
+                plan.inner_plan, T=min(plan.inner_plan.T, rem))
+                if plan.inner_plan is not None else None))
         run_rem, combine_rem = _depth_setup(rplan, rem, g, receivers,
                                             params, interpret)
         state, parts = run_rem(state, src_window(n_main * plan.T, rem),

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sources as src_mod
-from repro.core.temporal_blocking import TBPlan
+from repro.core.temporal_blocking import TBPassGeom, TBPlan
 from repro.kernels import stencil_tb as ker
 from repro.kernels import tb_physics as phys
 
@@ -155,6 +155,22 @@ def make_inner_spec(block: Tuple[int, int], nz: int,
         spacing=tuple(float(s) for s in spacing), src_cap=src_cap,
         rec_cap=rec_cap, dtype=dtype, step_radius=physics.step_radius(order),
         rec_channels=physics.rec_channels)
+
+
+def pass_inner_spec(geom: TBPassGeom, nz: int, order: int, dt: float,
+                    spacing: Tuple[float, float, float], src_cap: int,
+                    rec_cap: int, dtype,
+                    physics: phys.TBPhysics) -> ker.TBKernelSpec:
+    """Kernel spec for ONE pass of the time-nested inner schedule
+    (DESIGN.md §4): the pass's kernel grid is the shard block plus the
+    halo depth still valid AFTER the pass (`geom.d_out`, rounded up to the
+    inner tile), its halo is the per-pass consumption `geom.T * r_step`,
+    and the window DMA (fields AND the shard's `dom_pad`) slices at the
+    pass-local `(ti*tx, tj*ty)` origin — so the same `tb_time_tile` call
+    advances a window that shrinks pass by pass, with the VMEM window
+    sized by the INNER depth regardless of the exchange depth."""
+    return make_inner_spec(geom.grid, nz, geom.tile, geom.T, order, dt,
+                           spacing, src_cap, rec_cap, dtype, physics)
 
 
 def _tb_propagate(physics: phys.TBPhysics, nt: int,

@@ -236,9 +236,14 @@ def tb_time_tile(spec: TBKernelSpec, physics: phys.TBPhysics,
                   It is DMA'd per tile through the same `(ti*tx, tj*ty)`
                   window slice as the field operands, so it composes with
                   a multi-tile inner grid (spec.tile < (nx, ny)) exactly
-                  like the state windows: the sharded layer's inner
-                  `TBPlan` spatially tiles the exchanged shard block in
-                  one `pallas_call` (DESIGN.md §4).
+                  like the state windows.  The sharded layer exploits this
+                  twice (DESIGN.md §4): the flat schedule tiles the whole
+                  exchanged shard block in one `pallas_call`, and the
+                  time-nested schedule issues one call PER PASS with the
+                  spec's grid/halo parameterized by the remaining exchange
+                  depth (`ops.pass_inner_spec`: grid = block + 2*d_out
+                  rounded up to the tile, halo = inner_T * r_step) —
+                  dom_pad then also masks the round-up garbage band.
     Returns (new_states tuple, rec_partials) with fields (nx, ny, nz) and
     rec_partials (ntx, nty, T, capr, rec_channels).
     """

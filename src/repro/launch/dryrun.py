@@ -70,29 +70,38 @@ def stencil_plan_report(physics: str, nz: int, order: int,
     (DESIGN.md §4) — the stencil analogue of an LM dry-run cell.
 
     Runs `core.temporal_blocking.plan_hierarchy` (outer exchange depth x
-    inner Pallas tile x overlapped-vs-serialized exchange, under the
+    inner (tile, T) x overlapped-vs-serialized exchange, under the
     mesh-aware cost model) and records what the executor will do plus the
-    per-field exchange-byte saving against the uniform-depth baseline.
-    Consumed by `launch/stencil_dist.py --dryrun` and
-    `benchmarks/fig12_scaling.py --dryrun`.
+    per-field exchange-byte saving against the uniform-depth baseline and
+    the VMEM saving of the time-nested schedule against the flat plan at
+    the same exchange depth.  Consumed by `launch/stencil_dist.py
+    --dryrun` and `benchmarks/fig12_scaling.py --dryrun`.
     """
-    from repro.core.temporal_blocking import plan_hierarchy
+    from repro.core.temporal_blocking import (PHYSICS_COSTS, TBPlan,
+                                              plan_hierarchy)
 
     hier, log = plan_hierarchy(physics, nz, order, block, **plan_kwargs)
-    entry = log[(hier.inner.tile[0], hier.inner.tile[1], hier.T)]
+    entry = log[(hier.inner.tile[0], hier.inner.tile[1], hier.inner.T,
+                 hier.outer_T)]
     uni = hier.exchange_bytes_uniform(nz)
     pf = hier.exchange_bytes(nz)
+    fields = PHYSICS_COSTS[physics].fields
+    flat_vmem = TBPlan(hier.inner.tile, hier.outer_T,
+                       hier.inner.radius).vmem_bytes(nz, fields)
     return {
         "physics": physics, "order": order, "block": list(block), "nz": nz,
-        "outer": {"T": hier.T, "halo": hier.halo,
+        "outer": {"T": hier.outer_T, "halo": hier.halo,
                   "overlap": hier.overlap,
                   "field_depths": list(hier.field_depths)},
-        "inner": {"tile": list(hier.inner.tile),
+        "inner": {"tile": list(hier.inner.tile), "T": hier.inner.T,
+                  "passes": -(-hier.outer_T // hier.inner.T),
                   "grid": [block[0] // hier.inner.tile[0],
                            block[1] // hier.inner.tile[1]]},
         "exchange_bytes": int(pf),
         "exchange_bytes_uniform": int(uni),
         "exchange_saving": round(1.0 - pf / uni, 4) if uni else 0.0,
+        "vmem_bytes": int(hier.vmem_bytes(nz, fields)),
+        "vmem_bytes_flat": int(flat_vmem),
         "model": {k: entry[k] for k in
                   ("compute_s", "memory_s", "comm_s", "split_s", "cost_s")
                   if k in entry},

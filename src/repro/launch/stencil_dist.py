@@ -28,6 +28,12 @@ traces — with the single-device Listing-1 reference.
       python -m repro.launch.stencil_dist --check --inner pallas \
       --inner-tile 4,8 --overlap --n 32
 
+  # time-nested: a depth-4 exchange consumed by depth-2 inner passes
+  # (--T is the INNER depth once --outer-T decouples the levels):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.stencil_dist --check --inner pallas \
+      --inner-tile 4,8 --T 2 --outer-T 4 --n 32
+
   # let the joint autotuner pick (T, inner tile, overlap) for the block:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       python -m repro.launch.stencil_dist --check --auto-plan --n 32
@@ -123,6 +129,12 @@ def main():
                     help="tx,ty spatial tile of the inner trapezoid "
                          "(must divide the shard block); default: one tile "
                          "covering the block")
+    ap.add_argument("--outer-T", type=int, default=None, dest="outer_T",
+                    help="time-nest the two levels: exchange at this depth "
+                         "while --T becomes the INNER (per-pass, VMEM) "
+                         "depth — ceil(outer/inner) passes per deep "
+                         "exchange over shrinking windows; default: flat "
+                         "(outer depth = --T)")
     ap.add_argument("--overlap", action="store_true",
                     help="overlapped deep exchange: split first step into "
                          "interior (runs under the ppermute) + rim strips")
@@ -145,9 +157,14 @@ def main():
     ap.add_argument("--T", type=int, default=2)
     ap.add_argument("--order", type=int, default=4)
     args = ap.parse_args()
-    if args.auto_plan and (args.inner_tile or args.overlap or args.sweep_T):
+    if args.auto_plan and (args.inner_tile or args.overlap or args.sweep_T
+                           or args.outer_T):
         ap.error("--auto-plan picks T/inner tile/overlap itself; it cannot "
-                 "be combined with --inner-tile, --overlap or --sweep-T")
+                 "be combined with --inner-tile, --overlap, --outer-T or "
+                 "--sweep-T")
+    if args.outer_T and args.sweep_T:
+        ap.error("--sweep-T sweeps the exchange depth; it cannot be "
+                 "combined with --outer-T")
 
     if args.dryrun and "--xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -180,17 +197,23 @@ def main():
         if args.auto_plan:
             hier, _ = plan_hierarchy(args.physics, shape[2], order, block,
                                      tiles=AUTO_TILES, depths=AUTO_DEPTHS)
-            print(f"auto-plan: T={hier.T} inner tile={hier.inner.tile} "
+            print(f"auto-plan: outer T={hier.outer_T} "
+                  f"inner T={hier.inner.T} inner tile={hier.inner.tile} "
                   f"overlap={hier.overlap} "
                   f"field depths={hier.field_depths}")
             return dist_plan_from_hier(mesh, shape, physics, order, hier,
                                        dt, grid.spacing, **common)
+        # --outer-T decouples the levels: --T is then the inner depth
+        T_outer = args.outer_T or T
         inner_plan = None
-        if args.inner_tile:
-            tx, ty = (int(v) for v in args.inner_tile.split(","))
-            inner_plan = TBPlan((tx, ty), T, physics.step_radius(order))
+        if args.inner_tile or T != T_outer:
+            if args.inner_tile:
+                tile = tuple(int(v) for v in args.inner_tile.split(","))
+            else:
+                tile = block
+            inner_plan = TBPlan(tile, T, physics.step_radius(order))
         return DistTBPlan(mesh=mesh, grid_shape=shape, physics=physics,
-                          order=order, T=T, dt=dt, spacing=grid.spacing,
+                          order=order, T=T_outer, dt=dt, spacing=grid.spacing,
                           inner_plan=inner_plan, overlap=args.overlap,
                           **common)
 
@@ -209,8 +232,8 @@ def main():
         print("autotuner recommendation:", json.dumps(report))
         plan = build_plan(mesh, shape, grid, phys.PHYSICS[args.physics],
                           args.order, 1e-3, args.T)
-        print(f"compiled plan: T={plan.T} inner_tile={plan.inner_tile} "
-              f"overlap={plan.overlap} "
+        print(f"compiled plan: outer_T={plan.T} inner_T={plan.inner_T} "
+              f"inner_tile={plan.inner_tile} overlap={plan.overlap} "
               f"field_depths={plan.field_depths(plan.T)}")
         ns = len(plan.physics.state_fields)
         npar = len(plan.physics.param_fields)
@@ -284,7 +307,9 @@ def main():
           f"{dict(mesh.shape)} (inner={args.inner}, "
           f"inner_tile={args.inner_tile or 'block'}, "
           f"overlap={args.overlap}, "
-          f"per_field_halo={not args.uniform_halo}, nt={nt}, T={args.T})")
+          f"per_field_halo={not args.uniform_halo}, nt={nt}, "
+          f"outer_T={args.outer_T or args.T}"
+          + (f", inner_T={args.T}" if args.outer_T else "") + ")")
 
     if args.check:
         rstate, rrec = ref_fn(nt, g, gr)

@@ -73,6 +73,68 @@ def test_two_level_inner_tile_equals_reference(physics, inner):
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("physics,inner,inner_T,outer_T", [
+    # acoustic r_step=2 on the (8, 16) block: outer_T=4 (halo 8) with
+    # every proper divisor as the inner depth
+    ("acoustic", "jnp", 1, 4), ("acoustic", "jnp", 2, 4),
+    ("acoustic", "pallas", 1, 4), ("acoustic", "pallas", 2, 4),
+    # TTI/elastic r_step=4: outer_T=2 (halo 8) nested as two depth-1
+    # passes per exchange
+    ("tti", "jnp", 1, 2), ("tti", "pallas", 1, 2),
+    ("elastic", "jnp", 1, 2), ("elastic", "pallas", 1, 2),
+])
+def test_time_nested_equals_reference(physics, inner, inner_T, outer_T):
+    """The tentpole: inner_T < outer_T runs outer_T/inner_T inner passes
+    per deep exchange over pass-by-pass-shrinking windows — bit-exact
+    against the single-level reference for every physics and both
+    executors, nt % outer_T != 0 included (nt=6: remainder 2 for
+    acoustic, whole tiles for TTI/elastic at outer_T=2 — nt=5 covers
+    their remainder)."""
+    nt = 6 if physics == "acoustic" else 5
+    r = _run(["-m", "repro.launch.stencil_dist", "--check", "--physics",
+              physics, "--inner", inner, "--inner-tile", "4,8",
+              "--n", "32", "--nt", str(nt), "--T", str(inner_T),
+              "--outer-T", str(outer_T)])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "CHECK PASS" in r.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("inner_T", [1, 2])
+def test_time_nested_overlap_equals_reference(inner_T):
+    """Overlap composes with nesting: the split first step consumes pass
+    0's first timestep, the remaining T-1 steps chunk at the inner depth
+    — inner_T=2 makes that remainder odd (passes of depth 2 then 1), so
+    the shallower-than-inner_T final pass is exercised WITH overlap."""
+    r = _run(["-m", "repro.launch.stencil_dist", "--check", "--physics",
+              "acoustic", "--inner", "pallas", "--inner-tile", "4,8",
+              "--overlap", "--n", "32", "--nt", "7", "--T", str(inner_T),
+              "--outer-T", "4"])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "CHECK PASS" in r.stdout
+
+
+def test_inner_depth_guard():
+    """inner_plan.T above the exchange depth is rejected at validate."""
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core.temporal_blocking import TBPlan
+    from repro.distributed.halo import DistTBPlan
+    from repro.kernels import tb_physics as phys
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    plan = DistTBPlan(mesh=mesh, grid_shape=(32, 32, 8),
+                      physics=phys.ACOUSTIC, order=4, T=2,
+                      inner_plan=TBPlan((8, 8), 4, 2))
+    with pytest.raises(ValueError, match="inner plan depth"):
+        plan.validate()
+    # nested depths below T are accepted
+    plan._replace(inner_plan=TBPlan((8, 8), 1, 2)).validate()
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("physics,inner", [
     ("acoustic", "pallas"), ("elastic", "jnp"), ("tti", "jnp"),
 ])
@@ -113,8 +175,11 @@ def test_auto_plan_self_check():
 @pytest.mark.slow
 def test_fig12_dryrun_reports_joint_plans():
     """The scaling benchmark's cost-model sweep reports joint (outer,
-    inner, overlap) selections with elastic exchange bytes reduced vs the
-    uniform-depth baseline (acceptance criterion)."""
+    inner tile, inner T, overlap) selections with elastic exchange bytes
+    reduced vs the uniform-depth baseline, and demonstrates the nested
+    acceptance point: a deep-outer plan whose VMEM window is strictly
+    smaller than the flat plan's at equal exchange bytes (asserted inside
+    the sweep itself)."""
     r = _run(["-m", "benchmarks.fig12_scaling", "--dryrun"],
              env={**os.environ,
                   "PYTHONPATH": os.pathsep.join(
@@ -122,6 +187,8 @@ def test_fig12_dryrun_reports_joint_plans():
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert "# plan elastic" in r.stdout
     assert "T=" in r.stdout and "overlap=" in r.stdout
+    assert "inner_T=" in r.stdout
+    assert "# nested acoustic" in r.stdout and "vs flat" in r.stdout
 
 
 @pytest.mark.slow

@@ -1,0 +1,222 @@
+"""Property-based tests for the distributed TB layer (ISSUE 4).
+
+Three groups, all runnable without devices (the subprocess parity suite in
+`test_distributed.py` covers the ppermute wiring on a real 8-device mesh):
+
+* `exchange_to_depth` roundtrip — the per-field shallow-strip + zero-pad
+  exchange equals the full-depth exchange with the outer band zeroed, for
+  random (depth, h, block, domain-edge) configurations.  The production
+  `halo_exchange`/`halo_exchange_2d`/`exchange_to_depth` code runs
+  unmodified; only the two neighbor-strip providers are injected
+  (`shift_fns`) with a collective-free simulator fed from a 3x3 block
+  neighborhood — including the x-then-y ordering subtlety that the y
+  strips come from the neighbor's already-x-padded block.
+
+* `TBPhysics.field_halo_depths` / `DistTBPlan.field_depths` — per-field
+  exchange depths never exceed the uniform depth, some field always ships
+  full depth (the dependency cone binds), and depths are monotone in T.
+
+* `nested_pass_geometry` — the time-nested pass schedule telescopes
+  exactly through the exchanged halo (d_in/d_out chain, step counts, tile
+  round-up bounds).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_stub import given, hst, settings
+
+from repro.core.temporal_blocking import nested_pass_geometry
+from repro.distributed import halo as H
+from repro.kernels import tb_physics as phys
+
+
+# ---------------------------------------------------------------------------
+# exchange_to_depth roundtrip under simulated neighbor shifts
+# ---------------------------------------------------------------------------
+
+def _zeros_like_piece(x, h, dim):
+    shape = list(x.shape)
+    shape[dim] = h
+    return jnp.zeros(shape, x.dtype)
+
+
+def _sim_shifts(nbrs):
+    """Collective-free `(from_low, from_high)` pair for ONE shard, fed
+    from its 3x3 neighborhood `nbrs[(di, dj)]` (None = domain boundary ->
+    Dirichlet zeros, like a missing ppermute peer).
+
+    The y-round runs on the x-padded block, so the y strips are sliced
+    from the neighbor's x-padded block, assembled here from the corner
+    entries at the pad depth implied by the current operand shape.
+    """
+    def xpad(nb, col, hx):
+        west, east = nbrs.get((-1, col)), nbrs.get((1, col))
+        lo = west[-hx:] if west is not None else jnp.zeros(
+            (hx,) + nb.shape[1:], nb.dtype)
+        hi = east[:hx] if east is not None else jnp.zeros(
+            (hx,) + nb.shape[1:], nb.dtype)
+        return jnp.concatenate([lo, nb, hi], axis=0)
+
+    def strip(x, h, dim, side):
+        col = -1 if side == "low" else 1
+        if dim == 0:
+            nb = nbrs.get((col, 0))
+            if nb is None:
+                return _zeros_like_piece(x, h, 0)
+            return nb[-h:] if side == "low" else nb[:h]
+        nb = nbrs.get((0, col))
+        if nb is None:
+            return _zeros_like_piece(x, h, 1)
+        hx = (x.shape[0] - nb.shape[0]) // 2
+        nbp = xpad(nb, col, hx) if hx else nb
+        return nbp[:, -h:] if side == "low" else nbp[:, :h]
+
+    return (lambda x, h, axis_name, dim: strip(x, h, dim, "low"),
+            lambda x, h, axis_name, dim: strip(x, h, dim, "high"))
+
+
+def _neighborhood(bx, by, nz, has_w, has_e, has_s, has_n, seed):
+    """Random center block + the 3x3 neighborhood of a rectangular
+    domain: corners exist iff both adjacent sides do."""
+    rng = np.random.RandomState(seed)
+    exists = {(-1, 0): has_w, (1, 0): has_e, (0, -1): has_s, (0, 1): has_n,
+              (-1, -1): has_w and has_s, (-1, 1): has_w and has_n,
+              (1, -1): has_e and has_s, (1, 1): has_e and has_n}
+    nbrs = {k: (jnp.asarray(rng.randn(bx, by, nz), jnp.float32)
+                if ok else None)
+            for k, ok in exists.items()}
+    centre = jnp.asarray(rng.randn(bx, by, nz), jnp.float32)
+    return centre, nbrs
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=hst.sampled_from([(4, 4, 2), (6, 4, 3), (8, 6, 2)]),
+       h=hst.integers(1, 4), d_raw=hst.integers(0, 4),
+       has_w=hst.booleans(), has_e=hst.booleans(),
+       has_s=hst.booleans(), has_n=hst.booleans(),
+       seed=hst.integers(0, 999))
+def test_property_exchange_to_depth_roundtrip(dims, h, d_raw, has_w, has_e,
+                                              has_s, has_n, seed):
+    """Shallow strip + zero pad == full-depth exchange with the outer
+    (h - depth) band zeroed — the valid-centre-preserving contract the
+    per-field exchange (`TBPhysics.halo_lags`) rests on."""
+    bx, by, nz = dims
+    depth = min(d_raw, h)
+    centre, nbrs = _neighborhood(bx, by, nz, has_w, has_e, has_s, has_n,
+                                 seed)
+    shifts = _sim_shifts(nbrs)
+    full = H.halo_exchange_2d(centre, h, "x", "y", shift_fns=shifts)
+    shallow = H.exchange_to_depth(centre, depth, h, "x", "y",
+                                  shift_fns=shifts)
+    assert full.shape == shallow.shape == (bx + 2 * h, by + 2 * h, nz)
+    ii = np.arange(bx + 2 * h)[:, None, None]
+    jj = np.arange(by + 2 * h)[None, :, None]
+    band = ((ii < h - depth) | (ii >= bx + h + depth)
+            | (jj < h - depth) | (jj >= by + h + depth))
+    expect = np.where(band, 0.0, np.asarray(full))
+    np.testing.assert_array_equal(np.asarray(shallow), expect)
+    # and the centre is always the untouched local block
+    np.testing.assert_array_equal(
+        np.asarray(shallow[h:h + bx, h:h + by]), np.asarray(centre))
+
+
+def test_exchange_to_depth_full_depth_is_plain_exchange():
+    """depth == h is bit-identical to halo_exchange_2d (no pad branch)."""
+    centre, nbrs = _neighborhood(6, 4, 2, True, True, True, True, 7)
+    shifts = _sim_shifts(nbrs)
+    np.testing.assert_array_equal(
+        np.asarray(H.exchange_to_depth(centre, 3, 3, "x", "y",
+                                       shift_fns=shifts)),
+        np.asarray(H.halo_exchange_2d(centre, 3, "x", "y",
+                                      shift_fns=shifts)))
+
+
+# ---------------------------------------------------------------------------
+# Per-field exchange depths: bounded by the uniform depth, monotone in T
+# ---------------------------------------------------------------------------
+
+def _one_device_plan(physics, T, order):
+    mesh = jax.sharding.Mesh(
+        np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    return H.DistTBPlan(mesh=mesh, grid_shape=(64, 64, 8), physics=physics,
+                        order=order, T=T)
+
+
+@settings(max_examples=20, deadline=None)
+@given(name=hst.sampled_from(["acoustic", "tti", "elastic"]),
+       T=hst.integers(1, 6), order=hst.sampled_from([2, 4, 8]))
+def test_property_field_depths_bounded_and_monotone(name, T, order):
+    tp = phys.PHYSICS[name]
+    h = T * tp.step_radius(order)
+    depths = tp.field_halo_depths(T, order)
+    assert len(depths) == len(tp.state_fields)
+    assert all(0 <= d <= h for d in depths)          # never exceed uniform
+    assert max(depths) == h                          # some field binds full
+    deeper = tp.field_halo_depths(T + 1, order)
+    assert all(b >= a for a, b in zip(depths, deeper))  # monotone in T
+
+
+@settings(max_examples=10, deadline=None)
+@given(name=hst.sampled_from(["acoustic", "tti", "elastic"]),
+       T=hst.integers(1, 4), order=hst.sampled_from([2, 4]))
+def test_property_dist_plan_field_depths(name, T, order):
+    """`DistTBPlan.field_depths` == the physics' cone depths (per-field
+    on), == the uniform depth everywhere (per-field off), at ANY tile
+    depth including the remainder depths below plan.T."""
+    tp = phys.PHYSICS[name]
+    plan = _one_device_plan(tp, T, order)
+    for T_depth in range(1, T + 1):
+        h = T_depth * plan.r_step
+        assert plan.field_depths(T_depth) == tp.field_halo_depths(T_depth,
+                                                                  order)
+        uni = plan._replace(per_field_halo=False).field_depths(T_depth)
+        assert uni == (h,) * len(tp.state_fields)
+        assert all(d <= h for d in plan.field_depths(T_depth))
+
+
+# ---------------------------------------------------------------------------
+# Time-nested pass geometry
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(T_steps=hst.integers(1, 8), inner_T=hst.integers(1, 8),
+       r=hst.sampled_from([1, 2, 4]),
+       block=hst.sampled_from([(8, 8), (8, 16), (12, 12)]),
+       tile=hst.sampled_from([(4, 4), (4, 8), (8, 8), (12, 4)]))
+def test_property_pass_geometry_telescopes(T_steps, inner_T, r, block,
+                                           tile):
+    geoms = nested_pass_geometry(block, tile, T_steps, inner_T, r)
+    assert sum(g.T for g in geoms) == T_steps
+    assert len(geoms) == -(-T_steps // inner_T)
+    assert geoms[0].d_in == T_steps * r
+    assert geoms[-1].d_out == 0
+    t0 = 0
+    prev_d = T_steps * r
+    for g in geoms:
+        assert g.t0 == t0
+        t0 += g.T
+        assert 1 <= g.T <= inner_T
+        assert g.d_in == prev_d          # depths telescope pass-to-pass
+        assert g.d_in == g.d_out + g.T * r
+        prev_d = g.d_out
+        assert g.halo == g.T * r
+        assert g.include_halo == (g.T > 1)
+        for ax in (0, 1):
+            need = block[ax] + 2 * g.d_out
+            assert g.grid[ax] % tile[ax] == 0       # kernel-grid contract
+            assert need <= g.grid[ax] < need + tile[ax]  # minimal round-up
+            assert g.ntiles[ax] == g.grid[ax] // tile[ax]
+    # all but the last pass run at exactly the inner depth
+    assert all(g.T == inner_T for g in geoms[:-1])
+
+
+def test_pass_geometry_flat_is_single_pass():
+    geoms = nested_pass_geometry((16, 16), (8, 8), 4, 4, 2)
+    assert len(geoms) == 1 and geoms[0].grid == (16, 16)
+    assert geoms[0].d_out == 0 and geoms[0].d_in == 8
+
+
+def test_pass_geometry_rejects_bad_depths():
+    with pytest.raises(ValueError):
+        nested_pass_geometry((16, 16), (8, 8), 4, 0, 2)
