@@ -1,15 +1,25 @@
-"""CI regression gate over the distributed-scaling trajectory (ROADMAP).
+"""CI regression gate over the perf trajectories (ROADMAP).
 
-Compares a fresh ``fig12_scaling.py`` run against the committed
-``results/BENCH_dist.json`` and fails when the GEOMETRIC MEAN throughput
-over matching cells drops by more than ``--tol`` (default 15%).  The mean
-— not per-cell — is the gate because the cells are sub-millisecond CPU
-wall-clocks whose individual noise floor exceeds any sane tolerance;
-per-cell ratios are still printed for the log.  Cells are matched on the
-full schedule key (mode, ndev, physics, grid, nt, T, order, inner tile,
-overlap) so baseline refreshes — or a run with ``--overlap`` — simply
+Compares fresh benchmark runs against the committed baselines and fails
+when the GEOMETRIC MEAN throughput over matching cells drops by more than
+``--tol`` (default 15%).  Two trajectories are gated:
+
+  distributed   ``fig12_scaling.py`` cells vs ``results/BENCH_dist.json``
+                (metric: ``mpoints_per_s``), matched on the full schedule
+                key (mode, ndev, physics, grid, nt, T, order, inner tile,
+                inner T, overlap);
+  survey        ``fig13_survey.py`` cells vs ``results/BENCH_survey.json``
+                (metric: ``shots_per_s`` — the steady-state shot
+                throughput of the multi-shot engine), matched on
+                (physics, executor, grid, nt, order, shots, bucket_cap)
+                via ``--survey-fresh``/``--survey-baseline``.
+
+The mean — not per-cell — is the gate because the cells are
+sub-millisecond CPU wall-clocks whose individual noise floor exceeds any
+sane tolerance; per-cell ratios are still printed for the log.  Cells
+missing from the baseline (a schedule-key change, a new benchmark) simply
 drop out of the comparison instead of being gated against a different
-schedule's numbers; at least one cell must match.
+schedule's numbers; at least one cell must match per supplied pair.
 
 The default 15% assumes fresh and baseline ran on comparable hardware.
 Across machines (the committed baseline vs a shared CI runner) absolute
@@ -17,13 +27,17 @@ throughput is not comparable at that resolution — CI passes ``--tol 0.5``
 so the gate is a tripwire for catastrophic regressions (a lost jit cache,
 an accidentally quadratic path), not a micro-benchmark.
 
-Usage (CI runs exactly this after the fast scaling snapshot):
+Usage (CI runs exactly this after the fast benchmark snapshots):
 
     PYTHONPATH=src:. python benchmarks/fig12_scaling.py --fast \
         --out results/BENCH_dist_fresh.json
+    PYTHONPATH=src:. python benchmarks/fig13_survey.py --fast \
+        --out results/BENCH_survey_fresh.json
     python benchmarks/check_regression.py \
         --fresh results/BENCH_dist_fresh.json \
-        --baseline results/BENCH_dist.json
+        --baseline results/BENCH_dist.json \
+        --survey-fresh results/BENCH_survey_fresh.json \
+        --survey-baseline results/BENCH_survey.json
 
 Exit codes: 0 pass, 1 regression, 2 nothing comparable.
 """
@@ -36,60 +50,83 @@ import sys
 KEY = ("mode", "ndev", "physics", "grid", "nt", "T", "order",
        "inner_tile", "inner_T", "overlap")
 
+SURVEY_KEY = ("physics", "executor", "grid", "nt", "order", "shots",
+              "bucket_cap")
 
-def cell_key(rec: dict):
+
+def cell_key(rec: dict, fields=KEY):
     # .get: records from before a schedule field existed key as None and
     # only match records that also lack it
     return tuple(tuple(v) if isinstance(v := rec.get(k), list) else v
-                 for k in KEY)
+                 for k in fields)
 
 
-def compare(fresh: list, baseline: list, tol: float) -> int:
+def compare(fresh: list, baseline: list, tol: float, fields=KEY,
+            metric: str = "mpoints_per_s", label: str = "") -> int:
     import math
 
-    base = {cell_key(r): r for r in baseline}
+    base = {cell_key(r, fields): r for r in baseline}
     ratios = []
     for rec in fresh:
-        k = cell_key(rec)
+        k = cell_key(rec, fields)
         if k not in base:
             print(f"# new cell (no baseline): {k}")
             continue
-        ref = base[k]["mpoints_per_s"]
-        got = rec["mpoints_per_s"]
+        ref = base[k][metric]
+        got = rec[metric]
         ratio = got / ref if ref else float("inf")
         ratios.append(ratio)
-        print(f"{rec['mode']} ndev={rec['ndev']}: {got:.3f} vs "
-              f"{ref:.3f} Mpts/s ({100 * (ratio - 1):+.1f}%)")
+        print(f"{label}{k[0]} {k[1]}: {got:.3f} vs {ref:.3f} "
+              f"{metric} ({100 * (ratio - 1):+.1f}%)")
     if not ratios:
-        print("# no comparable cells between fresh run and baseline",
-              file=sys.stderr)
+        print(f"# no comparable {label or 'dist '}cells between fresh run "
+              f"and baseline", file=sys.stderr)
         return 2
     geomean = math.exp(sum(math.log(r) for r in ratios) / len(ratios))
-    print(f"# geomean throughput ratio over {len(ratios)} cells: "
+    print(f"# {label}geomean {metric} ratio over {len(ratios)} cells: "
           f"{geomean:.3f} (gate: >= {1 - tol:.2f})")
     if geomean < 1.0 - tol:
-        print(f"# REGRESSED: fresh run is {100 * (1 - geomean):.1f}% slower "
-              f"than the committed trajectory (> {tol:.0%})",
-              file=sys.stderr)
+        print(f"# REGRESSED: fresh {label}run is "
+              f"{100 * (1 - geomean):.1f}% slower than the committed "
+              f"trajectory (> {tol:.0%})", file=sys.stderr)
         return 1
-    print("# regression gate PASS")
+    print(f"# {label}regression gate PASS")
     return 0
+
+
+def _load(path: str) -> list:
+    with open(path) as f:
+        return json.load(f)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fresh", required=True,
+    ap.add_argument("--fresh", default=None,
                     help="JSON from the fresh fig12_scaling run")
     ap.add_argument("--baseline", default="results/BENCH_dist.json",
-                    help="committed trajectory to gate against")
+                    help="committed distributed trajectory to gate against")
+    ap.add_argument("--survey-fresh", default=None, dest="survey_fresh",
+                    help="JSON from the fresh fig13_survey run")
+    ap.add_argument("--survey-baseline", default="results/BENCH_survey.json",
+                    dest="survey_baseline",
+                    help="committed survey trajectory to gate against")
     ap.add_argument("--tol", type=float, default=0.15,
                     help="allowed fractional slowdown (default 0.15)")
     args = ap.parse_args()
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    return compare(fresh, baseline, args.tol)
+    if not args.fresh and not args.survey_fresh:
+        ap.error("need --fresh and/or --survey-fresh")
+    codes = []
+    if args.fresh:
+        codes.append(compare(_load(args.fresh), _load(args.baseline),
+                             args.tol))
+    if args.survey_fresh:
+        codes.append(compare(_load(args.survey_fresh),
+                             _load(args.survey_baseline), args.tol,
+                             fields=SURVEY_KEY, metric="shots_per_s",
+                             label="survey "))
+    # a real regression (1) must never be masked by the other trajectory
+    # reporting "nothing comparable" (2)
+    return 1 if 1 in codes else max(codes)
 
 
 if __name__ == "__main__":

@@ -126,13 +126,15 @@ def dryrun(blocks=((32, 32), (64, 64)), nz: int = 512, order: int = 4,
         for block in blocks:
             rep = stencil_plan_report(physics, nz, order, block)
             rows.append(rep)
+            cache_tag = "HIT" if rep["cache"]["hit"] else "MISS"
             print(f"# plan {physics} block={block[0]}x{block[1]}: "
                   f"T={rep['outer']['T']} inner_T={rep['inner']['T']} "
                   f"inner={rep['inner']['tile'][0]}x{rep['inner']['tile'][1]} "
                   f"overlap={rep['outer']['overlap']} "
                   f"exchange {rep['exchange_bytes']/2**20:.2f} MiB "
                   f"(uniform {rep['exchange_bytes_uniform']/2**20:.2f} MiB, "
-                  f"-{100*rep['exchange_saving']:.0f}%)")
+                  f"-{100*rep['exchange_saving']:.0f}%) "
+                  f"[cache {cache_tag} {rep['cache']['key']}]")
     el = [r for r in rows if r["physics"] == "elastic"]
     assert all(r["exchange_bytes"] < r["exchange_bytes_uniform"]
                for r in el), "per-field depths must cut elastic bytes"

@@ -1,0 +1,104 @@
+"""Fig. 13 (repo extension): multi-shot survey throughput.
+
+The paper benchmarks ONE propagate; a production survey runs thousands
+over the same model, and the engine's whole value is what it amortizes
+across them — the autotune sweep (plan cache), the jit traces (shot
+buckets), and the host transfer (double-buffered traces).  This benchmark
+measures shot throughput of `survey.SurveyEngine` per (physics, executor)
+cell and records it in ``results/BENCH_survey.json`` — the survey-side
+perf trajectory `benchmarks/check_regression.py` gates alongside
+``BENCH_dist.json``.
+
+Two timed passes per cell share one engine: the first pays the per-bucket
+jit traces, the second is the steady state a long survey amortizes to —
+the steady-state `shots_per_s` is the gated number.  Cache/compile
+counters are asserted (one sweep, one trace per bucket) so the benchmark
+itself guards the amortization contract.
+
+    PYTHONPATH=src:. python benchmarks/fig13_survey.py [--fast] \
+        [--out results/BENCH_survey.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+
+# (physics, executor) cells: the jnp executor for every physics (cheap on
+# CPU), the Pallas kernel for acoustic only (interpret mode is the CI
+# bottleneck; on real TPUs extend to all three)
+CELLS = (("acoustic", "jnp"), ("tti", "jnp"), ("elastic", "jnp"),
+         ("acoustic", "pallas"))
+
+
+def run_cell(physics: str, executor: str, n: int, nt: int, num_shots: int,
+             bucket_cap: int, order: int = 4) -> dict:
+    import numpy as np
+
+    from repro.core.grid import Grid
+    from repro.launch.stencil_survey import build_model, build_survey
+    from repro.survey import PlanCache, SurveyEngine
+
+    shape = (n, n, n // 2)
+    grid = Grid(shape=shape, spacing=(10.0,) * 3)
+    dt = grid.cfl_dt(3000.0, order)
+    rng = np.random.RandomState(0)
+    params = build_model(physics, shape, grid, rng)
+    shots = build_survey(grid, dt, nt, num_shots, rng)
+
+    cache = PlanCache()
+    engine = SurveyEngine(physics, grid, params, nt, dt, order=order,
+                          executor=executor, plan_cache=cache,
+                          bucket_cap=bucket_cap)
+    cold = engine.run(shots)
+    warm = engine.run(shots)  # steady state: all buckets already traced
+    assert cache.sweeps == 1, cache.stats()
+    assert all(v == 1 for v in engine.trace_counts.values()), \
+        engine.trace_counts
+    return {
+        "physics": physics, "executor": executor, "grid": list(shape),
+        "nt": nt, "order": order, "shots": num_shots,
+        "bucket_cap": bucket_cap,
+        "buckets": cold.stats["buckets"],
+        "plan": cold.stats["plan"],
+        "shots_per_s": warm.stats["shots_per_s"],
+        "mpoints_per_s": warm.stats["mpoints_per_s"],
+        "cold_shots_per_s": cold.stats["shots_per_s"],
+        "seconds": warm.stats["seconds"],
+        "sweeps": cache.sweeps,
+    }
+
+
+def run(out: str = None, fast: bool = False):
+    from benchmarks.common import emit
+
+    n, nt, num_shots, cap = (16, 4, 4, 2) if fast else (24, 6, 6, 2)
+    out = out or os.path.join(REPO, "results", "BENCH_survey.json")
+    records = []
+    for physics, executor in CELLS:
+        rec = run_cell(physics, executor, n, nt, num_shots, cap)
+        records.append(rec)
+        emit(f"fig13_{physics}_{executor}", rec["seconds"] * 1e6,
+             f"{rec['shots_per_s']:.3f} shots/s "
+             f"{rec['mpoints_per_s']:.3f} Mpts/s "
+             f"buckets={rec['buckets']}")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"# wrote {out} ({len(records)} cells)")
+    return records
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    run(out=args.out, fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

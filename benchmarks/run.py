@@ -16,7 +16,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig9_speedup, fig10_sources, fig11_roofline,
-                            fig12_scaling, lm_roofline,
+                            fig12_scaling, fig13_survey, lm_roofline,
                             overhead_precompute, table1_autotune)
 
     sections = [
@@ -28,8 +28,17 @@ def main() -> None:
         ("overhead (precompute cost, paper §I.C)",
          lambda: overhead_precompute.run(n=24, nt=4)),
         ("lm_roofline (§Roofline table from dry-run)", lm_roofline.run),
+        # the committed BENCH_*.json baselines are the --fast variant (CI's
+        # fresh runs match on exact cell keys) — a non-fast harness run
+        # writes to *_full.json (gitignored) instead of clobbering them
         ("fig12 (sharded TB weak/strong scaling -> BENCH_dist.json)",
-         lambda: fig12_scaling.run(fast=args.fast)),
+         lambda: fig12_scaling.run(
+             fast=args.fast,
+             out=None if args.fast else "results/BENCH_dist_full.json")),
+        ("fig13 (multi-shot survey throughput -> BENCH_survey.json)",
+         lambda: fig13_survey.run(
+             fast=args.fast,
+             out=None if args.fast else "results/BENCH_survey_full.json")),
     ]
     failed = 0
     for title, fn in sections:

@@ -174,6 +174,16 @@ class TBPlan:
     T: int
     radius: int
 
+    def to_dict(self) -> dict:
+        """JSON-safe form (the survey plan cache's on-disk format)."""
+        return {"tile": [int(t) for t in self.tile], "T": int(self.T),
+                "radius": int(self.radius)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TBPlan":
+        return cls(tile=tuple(int(t) for t in d["tile"]), T=int(d["T"]),
+                   radius=int(d["radius"]))
+
     @property
     def halo(self) -> int:
         return self.T * self.radius
@@ -637,6 +647,21 @@ class HierPlan:
     block: Tuple[int, int]
     overlap: bool
     field_depths: Tuple[int, ...]
+
+    def to_dict(self) -> dict:
+        """JSON-safe form (the survey plan cache's on-disk format)."""
+        return {"inner": self.inner.to_dict(), "outer_T": int(self.outer_T),
+                "block": [int(b) for b in self.block],
+                "overlap": bool(self.overlap),
+                "field_depths": [int(d) for d in self.field_depths]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "HierPlan":
+        return cls(inner=TBPlan.from_dict(d["inner"]),
+                   outer_T=int(d["outer_T"]),
+                   block=tuple(int(b) for b in d["block"]),
+                   overlap=bool(d["overlap"]),
+                   field_depths=tuple(int(x) for x in d["field_depths"]))
 
     @property
     def T(self) -> int:

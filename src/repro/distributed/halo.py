@@ -294,39 +294,10 @@ def _local_domain_mask(plan: DistTBPlan, h: int, shape_local, dtype):
 # Per-shard inner trapezoids
 # ---------------------------------------------------------------------------
 
-def _jnp_window_tile(physics: phys.TBPhysics, sspec: _StepSpec, T: int,
-                     h: int, state_pads, param_pads, dom, s_coords, s_vals,
-                     r_coords, r_w):
-    """T in-window timesteps on one halo-padded window — the jnp oracle of
-    the Pallas kernel's unrolled loop (`stencil_tb._tb_kernel`), sharing the
-    same `physics.update` / mask / inject / record sequence.
-
-    Returns (cropped centre tuple, rec partials (T, capr, rec_channels)).
-    """
-    state = dict(zip(physics.state_fields, state_pads))
-    params = dict(zip(physics.param_fields, param_pads))
-    mask_fn = lambda a: a * dom  # noqa: E731
-    sx, sy, sz = s_coords[:, 0], s_coords[:, 1], s_coords[:, 2]
-    rx, ry, rz = r_coords[:, 0], r_coords[:, 1], r_coords[:, 2]
-    recs = []
-    for k in range(T):
-        new = physics.update(state, params, sspec, mask_fn)
-        for f in physics.evolved_fields:
-            if f not in physics.premasked_fields:
-                new[f] = new[f] * dom
-        # fused grid-aligned injection (paper Listing 4); padding slots
-        # carry val = 0 and scatter harmlessly onto window point (0, 0, 0)
-        for f in physics.inject_fields:
-            new[f] = new[f].at[sx, sy, sz].add(s_vals[k].astype(new[f].dtype))
-        # per-step receiver partials (paper Fig. 3b gather, local entries)
-        recs.append(jnp.stack(
-            [(arr[rx, ry, rz] * r_w).astype(arr.dtype)
-             for arr in physics.record(new)], axis=-1))
-        state = new
-    wx, wy = state_pads[0].shape[0], state_pads[0].shape[1]
-    crop = (slice(h, wx - h), slice(h, wy - h), slice(None))
-    return (tuple(state[f][crop] for f in physics.state_fields),
-            jnp.stack(recs, axis=0))
+# The jnp oracle of one halo-padded window (shared with the single-device
+# driver — it moved to `kernels/ops` so the survey engine's jnp executor
+# and this sharded layer run literally the same function).
+_jnp_window_tile = ops_mod._jnp_window_tile
 
 
 def _run_pass(plan: DistTBPlan, geom: TBPassGeom, state_pads, param_pads,
@@ -633,7 +604,8 @@ def _combine_pass(parts, rid, nrec: int):
 def _depth_setup(plan: DistTBPlan, T_depth: int,
                  g: Optional[src_mod.GriddedSources],
                  receivers: Optional[src_mod.GriddedReceivers],
-                 params: Dict[str, jnp.ndarray], interpret: bool):
+                 params: Dict[str, jnp.ndarray], interpret: bool,
+                 prepped=None):
     """Build the shard_map'd tile function, its sharded tables / padded
     params, and the receiver-partial combiner for one time-tile depth
     (main T or the nt % T remainder).
@@ -644,7 +616,14 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
     gathered in-graph by the tile function (table `scale` column = 1/0
     validity mask).
 
-    Returns (run_tile, combine) with
+    `prepped` (optional) is the `(param_pads, dom_pad, h_from)` triple a
+    DEEPER depth setup already exchanged: the remainder tile's halo is
+    strictly shallower than the main tiles' (`rem < T`), so its padded
+    params and domain mask are a collective-free per-shard centre crop of
+    the main ones — the remainder pays ZERO param ppermute rounds
+    (ROADMAP: the remainder's serialized setup exchange).
+
+    Returns (run_tile, combine, (param_pads, dom_pad, h)) with
       run_tile(state, src_win, scale_vec) -> (new state, partials pytree)
       combine(partials) -> (T_depth, nrec, rec_channels) per-step samples.
     """
@@ -692,22 +671,40 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
     # --- time-invariant param halos (exchanged once per depth) --------------
     fills = dict(physics.param_fills)
 
-    @functools.partial(_shard_map, mesh=plan.mesh,
-                       in_specs=(spec3,) * npar,
-                       out_specs=(spec3,) * (npar + 1))
-    def prepare(*ps):
-        pads = [halo_exchange_2d(p, h, plan.ax_x, plan.ax_y) for p in ps]
-        dom = _local_domain_mask(plan, h, pads[0].shape, pads[0].dtype)
-        out = []
-        for f, pad in zip(physics.param_fields, pads):
-            fill = fills.get(f, 0.0)
-            if fill:
-                pad = jnp.where(dom > 0, pad, jnp.asarray(fill, pad.dtype))
-            out.append(pad)
-        return (*out, dom)
+    if prepped is not None and prepped[2] >= h:
+        # reuse a deeper setup's exchanged pads: per-shard centre crop
+        # (the depth-h mask/halo band IS the centre of the depth-h_from
+        # one), no ppermute at all
+        d = prepped[2] - h
 
-    prepped = prepare(*[params[f] for f in physics.param_fields])
-    param_pads, dom_pad = prepped[:npar], prepped[npar]
+        @functools.partial(_shard_map, mesh=plan.mesh,
+                           in_specs=(spec3,) * (npar + 1),
+                           out_specs=(spec3,) * (npar + 1))
+        def reslice(*ps):
+            if d == 0:
+                return ps
+            return tuple(p[d:-d, d:-d] for p in ps)
+
+        resliced = reslice(*prepped[0], prepped[1])
+        param_pads, dom_pad = resliced[:npar], resliced[npar]
+    else:
+        @functools.partial(_shard_map, mesh=plan.mesh,
+                           in_specs=(spec3,) * npar,
+                           out_specs=(spec3,) * (npar + 1))
+        def prepare(*ps):
+            pads = [halo_exchange_2d(p, h, plan.ax_x, plan.ax_y) for p in ps]
+            dom = _local_domain_mask(plan, h, pads[0].shape, pads[0].dtype)
+            out = []
+            for f, pad in zip(physics.param_fields, pads):
+                fill = fills.get(f, 0.0)
+                if fill:
+                    pad = jnp.where(dom > 0, pad,
+                                    jnp.asarray(fill, pad.dtype))
+                out.append(pad)
+            return (*out, dom)
+
+        prepared = prepare(*[params[f] for f in physics.param_fields])
+        param_pads, dom_pad = prepared[:npar], prepared[npar]
 
     # --- one outer-trapezoid tile: deep exchange + T local steps ------------
     sspec = _StepSpec(float(plan.dt), tuple(float(s) for s in plan.spacing),
@@ -792,7 +789,7 @@ def _depth_setup(plan: DistTBPlan, T_depth: int,
             idx += 1
         return recs[0] if len(recs) == 1 else jnp.concatenate(recs, axis=0)
 
-    return run_tile, combine
+    return run_tile, combine, (param_pads, dom_pad, h)
 
 
 def sharded_tb_propagate(plan: DistTBPlan, nt: int,
@@ -852,9 +849,11 @@ def sharded_tb_propagate(plan: DistTBPlan, nt: int,
     rem = nt - n_main * plan.T
 
     recs_main = None
+    main_pads = None
     if n_main > 0:
-        run_tile, combine = _depth_setup(plan, plan.T, g, receivers, params,
-                                         interpret)
+        run_tile, combine, main_pads = _depth_setup(plan, plan.T, g,
+                                                    receivers, params,
+                                                    interpret)
 
         def body(carry, tile_idx):
             new, parts = run_tile(carry, src_window(tile_idx * plan.T,
@@ -866,13 +865,16 @@ def sharded_tb_propagate(plan: DistTBPlan, nt: int,
 
     if rem > 0:
         # the remainder tile nests the same way: passes of the SAME inner
-        # depth (clamped when the remainder is shallower than one pass)
+        # depth (clamped when the remainder is shallower than one pass);
+        # its shallower param/domain pads are cropped out of the main
+        # tiles' deep-exchanged ones (no second param ppermute round)
         rplan = plan._replace(
             T=rem, inner_plan=(dataclasses.replace(
                 plan.inner_plan, T=min(plan.inner_plan.T, rem))
                 if plan.inner_plan is not None else None))
-        run_rem, combine_rem = _depth_setup(rplan, rem, g, receivers,
-                                            params, interpret)
+        run_rem, combine_rem, _ = _depth_setup(rplan, rem, g, receivers,
+                                               params, interpret,
+                                               prepped=main_pads)
         state, parts = run_rem(state, src_window(n_main * plan.T, rem),
                                scale_vec)
         rec_rem = combine_rem(parts)

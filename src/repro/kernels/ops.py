@@ -9,6 +9,18 @@ grid-aligned structures.  All three share one physics-agnostic driver
 the paper's point that the enabling transformation is independent of the
 propagator.  `acoustic_sb_propagate` (T = 1) is the spatially-blocked
 baseline the paper compares against.
+
+The driver is split at the host/device boundary (DESIGN.md §6): the
+host-side table binning happens in `_tb_propagate`, and everything after
+it — `tb_propagate_prepared` — is a pure traced function of jnp pytrees
+(state, padded params, `src_dcmp`, the per-tile tables).  That split is
+what makes the survey engine possible: `survey/engine.py` stacks the
+prepared tables of a whole shot bucket and `jax.vmap`s
+`tb_propagate_prepared` over the shot axis, one jit trace per bucket.
+Each time tile runs through one of two executors sharing the same window
+schedule: `executor="pallas"` (the `stencil_tb` kernel, interpret mode
+off-TPU) or `executor="jnp"` (`_jnp_time_tile`, the same per-window
+trapezoid in pure jnp — also the oracle the sharded layer reuses).
 """
 from __future__ import annotations
 
@@ -63,10 +75,14 @@ def build_tables(spec: ker.TBKernelSpec,
     return src_tab, rec_tab
 
 
-def _src_vals_for_tile(g: src_mod.GriddedSources, src_tab, t0, T: int):
-    """(ntiles, T, cap) injection values for time tile starting at t0."""
-    npts = g.src_dcmp.shape[1]
-    vals = jax.lax.dynamic_slice(g.src_dcmp, (t0, 0), (T, npts))  # (T, npts)
+def _src_vals_for_tile(src_dcmp: jnp.ndarray, src_tab, t0, T: int):
+    """(ntiles, T, cap) injection values for time tile starting at t0.
+
+    `src_dcmp` is the (nt, npts) decomposed-wavelet table
+    (`GriddedSources.src_dcmp`) — passed as a bare array so the whole
+    call stays a traced pytree function (vmappable over a shot axis)."""
+    npts = src_dcmp.shape[1]
+    vals = jax.lax.dynamic_slice(src_dcmp, (t0, 0), (T, npts))  # (T, npts)
     safe_sid = jnp.maximum(src_tab.sid, 0)                 # (ntiles, cap)
     sv = vals[:, safe_sid]                                 # (T, ntiles, cap)
     sv = jnp.transpose(sv, (1, 0, 2)) * src_tab.scale[:, None, :]
@@ -88,15 +104,85 @@ def combine_rec_partials(rec_part: jnp.ndarray, rec_tab, nrec: int):
     return jnp.transpose(seg[:nrec], (1, 0, 2))            # (T, nrec, nchan)
 
 
+def _jnp_window_tile(physics: phys.TBPhysics, sspec, T: int, h: int,
+                     state_pads, param_pads, dom, s_coords, s_vals,
+                     r_coords, r_w):
+    """T in-window timesteps on one halo-padded window — the jnp oracle of
+    the Pallas kernel's unrolled loop (`stencil_tb._tb_kernel`), sharing the
+    same `physics.update` / mask / inject / record sequence.  `sspec` is
+    anything exposing `dt`/`spacing`/`order` (a `TBKernelSpec` here, the
+    sharded layer's `_StepSpec` in `distributed/halo.py`).
+
+    Returns (cropped centre tuple, rec partials (T, capr, rec_channels)).
+    """
+    state = dict(zip(physics.state_fields, state_pads))
+    params = dict(zip(physics.param_fields, param_pads))
+    mask_fn = lambda a: a * dom  # noqa: E731
+    sx, sy, sz = s_coords[:, 0], s_coords[:, 1], s_coords[:, 2]
+    rx, ry, rz = r_coords[:, 0], r_coords[:, 1], r_coords[:, 2]
+    recs = []
+    for k in range(T):
+        new = physics.update(state, params, sspec, mask_fn)
+        for f in physics.evolved_fields:
+            if f not in physics.premasked_fields:
+                new[f] = new[f] * dom
+        # fused grid-aligned injection (paper Listing 4); padding slots
+        # carry val = 0 and scatter harmlessly onto window point (0, 0, 0)
+        for f in physics.inject_fields:
+            new[f] = new[f].at[sx, sy, sz].add(s_vals[k].astype(new[f].dtype))
+        # per-step receiver partials (paper Fig. 3b gather, local entries)
+        recs.append(jnp.stack(
+            [(arr[rx, ry, rz] * r_w).astype(arr.dtype)
+             for arr in physics.record(new)], axis=-1))
+        state = new
+    wx, wy = state_pads[0].shape[0], state_pads[0].shape[1]
+    crop = (slice(h, wx - h), slice(h, wy - h), slice(None))
+    return (tuple(state[f][crop] for f in physics.state_fields),
+            jnp.stack(recs, axis=0))
+
+
+def _jnp_time_tile(spec: ker.TBKernelSpec, physics: phys.TBPhysics,
+                   state_pads, param_pads, s_coords, s_vals, r_coords, r_w):
+    """jnp oracle of `stencil_tb.tb_time_tile`: the identical per-window
+    trapezoid (window DMA -> T masked steps -> centre crop) looped in pure
+    jnp, one window per (ti, tj) tile.  Same signature contract; returns
+    (state tuple (nx, ny, nz), rec partials (ntx, nty, T, capr, chan))."""
+    h = spec.halo
+    tx, ty = spec.tile
+    ntx, nty = spec.ntiles
+    dom_pad = jnp.pad(jnp.ones((spec.nx, spec.ny, spec.nz), spec.dtype),
+                      ((h, h), (h, h), (0, 0)))
+    outs = [jnp.zeros((spec.nx, spec.ny, spec.nz), p.dtype)
+            for p in state_pads]
+    rec_rows = []
+    for ti in range(ntx):
+        row = []
+        for tj in range(nty):
+            k = ti * nty + tj
+            slx = slice(ti * tx, ti * tx + tx + 2 * h)
+            sly = slice(tj * ty, tj * ty + ty + 2 * h)
+            wpads = tuple(p[slx, sly] for p in state_pads)
+            wpar = tuple(p[slx, sly] for p in param_pads)
+            out_w, rec = _jnp_window_tile(
+                physics, spec, spec.T, h, wpads, wpar, dom_pad[slx, sly],
+                s_coords[k], s_vals[k], r_coords[k], r_w[k])
+            for i, centre in enumerate(out_w):
+                outs[i] = outs[i].at[ti * tx:(ti + 1) * tx,
+                                     tj * ty:(tj + 1) * ty, :].set(centre)
+            row.append(rec)
+        rec_rows.append(jnp.stack(row, axis=0))
+    return tuple(outs), jnp.stack(rec_rows, axis=0)
+
+
 def _run_time_tile(spec: ker.TBKernelSpec, physics: phys.TBPhysics,
-                   state, param_pads, g, src_tab, rec_tab, t0, nrec: int,
-                   interpret: bool):
+                   state, param_pads, src_dcmp, src_tab, rec_tab, t0,
+                   nrec: int, interpret: bool, executor: str = "pallas"):
     h = spec.halo
     ntx, nty = spec.ntiles
     ntiles = ntx * nty
     if src_tab is not None:
         s_coords = src_tab.coords
-        s_vals = _src_vals_for_tile(g, src_tab, t0, spec.T)
+        s_vals = _src_vals_for_tile(src_dcmp, src_tab, t0, spec.T)
     else:
         s_coords, s_vals = _dummy_tables(ntiles, spec.T)
     s_vals = s_vals.astype(spec.dtype)
@@ -108,9 +194,16 @@ def _run_time_tile(spec: ker.TBKernelSpec, physics: phys.TBPhysics,
     r_w = r_w.astype(spec.dtype)
 
     state_pads = tuple(_pad_xy(f, h, "constant") for f in state)
-    new_state, rec_part = ker.tb_time_tile(
-        spec, physics, state_pads, param_pads, s_coords, s_vals, r_coords,
-        r_w, interpret=interpret)
+    if executor == "pallas":
+        new_state, rec_part = ker.tb_time_tile(
+            spec, physics, state_pads, param_pads, s_coords, s_vals,
+            r_coords, r_w, interpret=interpret)
+    elif executor == "jnp":
+        new_state, rec_part = _jnp_time_tile(
+            spec, physics, state_pads, param_pads, s_coords, s_vals,
+            r_coords, r_w)
+    else:
+        raise ValueError(f"unknown executor {executor!r}")
     if rec_tab is not None:
         rec = combine_rec_partials(rec_part, rec_tab, nrec)
     else:
@@ -173,6 +266,64 @@ def pass_inner_spec(geom: TBPassGeom, nz: int, order: int, dt: float,
                            spacing, src_cap, rec_cap, dtype, physics)
 
 
+def tb_propagate_prepared(physics: phys.TBPhysics, nt: int,
+                          spec: ker.TBKernelSpec,
+                          rspec: Optional[ker.TBKernelSpec],
+                          state: Tuple[jnp.ndarray, ...],
+                          param_pads, rparam_pads,
+                          src_dcmp: jnp.ndarray, src_tab, rec_tab,
+                          rsrc_tab, rrec_tab, nrec: int,
+                          interpret: bool = True,
+                          executor: str = "pallas"):
+    """The traced core of `_tb_propagate`: scan over depth-T time tiles
+    plus the shallower `nt % T` remainder tile, AFTER all host-side table
+    binning.
+
+    Every non-static argument is a jnp pytree — state tuple, padded
+    params, the (nt, npts) `src_dcmp` wavelet table and the
+    `TileSourceTable`/`TileReceiverTable` NamedTuples — so this function
+    jits cleanly and, crucially, `jax.vmap`s over a stacked shot axis:
+    the survey engine (`survey/engine.py`) batches whole shot buckets
+    through one trace of this function.  `spec`/`rspec` (None when
+    `nt % spec.T == 0`), `nrec`, `interpret` and `executor`
+    ("pallas" | "jnp") are static.
+
+    Returns (final state tuple, recs (nt, nrec, rec_channels)); recs are
+    all-zero shaped (nt, 0, chan) when no receiver tables were bound.
+    """
+    n_main = nt // spec.T
+    rem = nt - n_main * spec.T
+    if (rem > 0) != (rspec is not None):
+        raise ValueError(f"nt={nt} with T={spec.T} needs "
+                         f"{'a' if rem else 'no'} remainder spec")
+
+    def tile_body(carry, tile_idx):
+        t0 = tile_idx * spec.T
+        new, rec = _run_time_tile(spec, physics, carry, param_pads,
+                                  src_dcmp, src_tab, rec_tab, t0, nrec,
+                                  interpret, executor)
+        return new, rec
+
+    carry = tuple(state)
+    recs_main = None
+    if n_main > 0:
+        carry, recs_main = jax.lax.scan(tile_body, carry,
+                                        jnp.arange(n_main))
+        recs_main = recs_main.reshape(n_main * spec.T, -1,
+                                      physics.rec_channels)
+
+    if rem > 0:
+        carry, rec_rem = _run_time_tile(
+            rspec, physics, carry, rparam_pads, src_dcmp, rsrc_tab,
+            rrec_tab, jnp.asarray(n_main * spec.T), nrec, interpret,
+            executor)
+        recs = (jnp.concatenate([recs_main, rec_rem], axis=0)
+                if recs_main is not None else rec_rem)
+    else:
+        recs = recs_main
+    return carry, recs
+
+
 def _tb_propagate(physics: phys.TBPhysics, nt: int,
                   state: Tuple[jnp.ndarray, ...],
                   params: Dict[str, jnp.ndarray],
@@ -180,7 +331,7 @@ def _tb_propagate(physics: phys.TBPhysics, nt: int,
                   receivers: Optional[src_mod.GriddedReceivers],
                   plan: TBPlan, order: int, dt,
                   spacing: Tuple[float, float, float],
-                  interpret: bool = True):
+                  interpret: bool = True, executor: str = "pallas"):
     """Propagate nt timesteps of `physics` with the temporally-blocked kernel.
 
     Semantics identical to the reference propagator in `core/propagators/`
@@ -188,8 +339,10 @@ def _tb_propagate(physics: phys.TBPhysics, nt: int,
     depth nt % T.  `state` is ordered as physics.state_fields; `params`
     maps physics.param_fields to (nx, ny, nz) arrays.
 
-    Host-side orchestration (table precompute) happens eagerly; each time
-    tile is one `pallas_call` under `lax.scan`.
+    Host-side orchestration (table precompute) happens eagerly here; the
+    traced tile loop is `tb_propagate_prepared`.  With the default
+    `executor="pallas"` each time tile is one `pallas_call`;
+    `executor="jnp"` runs the identical window schedule in pure jnp.
 
     Returns (final state tuple, rec (nt, nrec, rec_channels) | None).
     """
@@ -216,24 +369,11 @@ def _tb_propagate(physics: phys.TBPhysics, nt: int,
     param_pads = tuple(_pad_xy(params[f], h, "edge")
                        for f in physics.param_fields)
     nrec = receivers.num if receivers is not None else 0
+    src_dcmp = (g.src_dcmp if g is not None
+                else jnp.zeros((max(nt, 1), 1), dtype))
 
-    n_main = nt // spec.T
-    rem = nt - n_main * spec.T
-
-    def tile_body(carry, tile_idx):
-        t0 = tile_idx * spec.T
-        new, rec = _run_time_tile(spec, physics, carry, param_pads, g,
-                                  src_tab, rec_tab, t0, nrec, interpret)
-        return new, rec
-
-    carry = tuple(state)
-    recs_main = None
-    if n_main > 0:
-        carry, recs_main = jax.lax.scan(tile_body, carry,
-                                        jnp.arange(n_main))
-        recs_main = recs_main.reshape(n_main * spec.T, -1,
-                                      physics.rec_channels)
-
+    rem = nt % spec.T
+    rspec = rsrc_tab = rrec_tab = rparam_pads = None
     if rem > 0:
         rspec = specced(src_cap, rec_cap, T=rem)
         # remainder tables must be rebuilt: halo depth changes with T
@@ -241,14 +381,11 @@ def _tb_propagate(physics: phys.TBPhysics, nt: int,
                                           physics)
         rparam_pads = tuple(_pad_xy(params[f], rspec.halo, "edge")
                             for f in physics.param_fields)
-        carry, rec_rem = _run_time_tile(
-            rspec, physics, carry, rparam_pads, g, rsrc_tab, rrec_tab,
-            jnp.asarray(n_main * spec.T), nrec, interpret)
-        recs = (jnp.concatenate([recs_main, rec_rem], axis=0)
-                if recs_main is not None else rec_rem)
-    else:
-        recs = recs_main
 
+    carry, recs = tb_propagate_prepared(
+        physics, nt, spec, rspec, state, param_pads, rparam_pads,
+        src_dcmp, src_tab, rec_tab, rsrc_tab, rrec_tab, nrec,
+        interpret=interpret, executor=executor)
     if receivers is None:
         recs = None
     return carry, recs
@@ -263,13 +400,14 @@ def acoustic_tb_propagate(nt: int, u0, u1, m, damp,
                           receivers: Optional[src_mod.GriddedReceivers],
                           plan: TBPlan, order: int, dt,
                           spacing: Tuple[float, float, float],
-                          interpret: bool = True):
+                          interpret: bool = True,
+                          executor: str = "pallas"):
     """Acoustic TB propagation.  Returns ((u_prev, u), rec (nt, nrec) | None).
 
     Semantics identical to `kernels.ref.acoustic_reference` (tested)."""
     (u0n, u1n), recs = _tb_propagate(
         phys.ACOUSTIC, nt, (u0, u1), {"m": m, "damp": damp}, g, receivers,
-        plan, order, dt, spacing, interpret=interpret)
+        plan, order, dt, spacing, interpret=interpret, executor=executor)
     if recs is not None:
         recs = recs[..., 0]
     return (u0n, u1n), recs
@@ -278,7 +416,7 @@ def acoustic_tb_propagate(nt: int, u0, u1, m, damp,
 def tti_tb_propagate(nt: int, state, params, g, receivers,
                      plan: TBPlan, order: int, dt,
                      spacing: Tuple[float, float, float],
-                     interpret: bool = True):
+                     interpret: bool = True, executor: str = "pallas"):
     """TTI TB propagation.
 
     `state` is a `propagators.tti.TTIState`; `params` a `TTIParams`.
@@ -288,7 +426,8 @@ def tti_tb_propagate(nt: int, state, params, g, receivers,
     st_tuple = tuple(getattr(state, f) for f in phys.TTI.state_fields)
     pdict = {f: getattr(params, f) for f in phys.TTI.param_fields}
     final, recs = _tb_propagate(phys.TTI, nt, st_tuple, pdict, g, receivers,
-                                plan, order, dt, spacing, interpret=interpret)
+                                plan, order, dt, spacing, interpret=interpret,
+                                executor=executor)
     if recs is not None:
         recs = recs[..., 0]
     return tt.TTIState(**dict(zip(phys.TTI.state_fields, final))), recs
@@ -297,7 +436,8 @@ def tti_tb_propagate(nt: int, state, params, g, receivers,
 def elastic_tb_propagate(nt: int, state, params, g, receivers,
                          plan: TBPlan, order: int, dt,
                          spacing: Tuple[float, float, float],
-                         interpret: bool = True):
+                         interpret: bool = True,
+                         executor: str = "pallas"):
     """Elastic TB propagation.
 
     `state` is a `propagators.elastic.ElasticState`; `params` an
@@ -309,7 +449,7 @@ def elastic_tb_propagate(nt: int, state, params, g, receivers,
     pdict = {f: getattr(params, f) for f in phys.ELASTIC.param_fields}
     final, recs = _tb_propagate(phys.ELASTIC, nt, st_tuple, pdict, g,
                                 receivers, plan, order, dt, spacing,
-                                interpret=interpret)
+                                interpret=interpret, executor=executor)
     return el.ElasticState(**dict(zip(phys.ELASTIC.state_fields, final))), \
         recs
 

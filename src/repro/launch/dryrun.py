@@ -65,24 +65,29 @@ def _shape_bytes(text: str) -> int:
 
 
 def stencil_plan_report(physics: str, nz: int, order: int,
-                        block, **plan_kwargs) -> dict:
+                        block, plan_cache=None, **plan_kwargs) -> dict:
     """Joint two-level TB plan selection for one per-device stencil block
     (DESIGN.md §4) — the stencil analogue of an LM dry-run cell.
 
     Runs `core.temporal_blocking.plan_hierarchy` (outer exchange depth x
     inner (tile, T) x overlapped-vs-serialized exchange, under the
-    mesh-aware cost model) and records what the executor will do plus the
-    per-field exchange-byte saving against the uniform-depth baseline and
-    the VMEM saving of the time-nested schedule against the flat plan at
-    the same exchange depth.  Consumed by `launch/stencil_dist.py
-    --dryrun` and `benchmarks/fig12_scaling.py --dryrun`.
+    mesh-aware cost model) BEHIND the survey plan cache
+    (`survey/plan_cache.py`): repeated cells — and repeated CI runs when
+    ``REPRO_PLAN_CACHE_DIR`` points at a persistent directory — answer
+    from the cache instead of re-sweeping, and the report's ``cache``
+    field records the resolved key and hit/miss.  Records what the
+    executor will do plus the per-field exchange-byte saving against the
+    uniform-depth baseline and the VMEM saving of the time-nested
+    schedule against the flat plan at the same exchange depth.  Consumed
+    by `launch/stencil_dist.py --dryrun` and
+    `benchmarks/fig12_scaling.py --dryrun`.
     """
-    from repro.core.temporal_blocking import (PHYSICS_COSTS, TBPlan,
-                                              plan_hierarchy)
+    from repro.core.temporal_blocking import PHYSICS_COSTS, TBPlan
+    from repro.survey.plan_cache import cached_plan_hierarchy
 
-    hier, log = plan_hierarchy(physics, nz, order, block, **plan_kwargs)
-    entry = log[(hier.inner.tile[0], hier.inner.tile[1], hier.inner.T,
-                 hier.outer_T)]
+    hier, entry, info = cached_plan_hierarchy(physics, nz, order, block,
+                                              cache=plan_cache,
+                                              **plan_kwargs)
     uni = hier.exchange_bytes_uniform(nz)
     pf = hier.exchange_bytes(nz)
     fields = PHYSICS_COSTS[physics].fields
@@ -105,6 +110,7 @@ def stencil_plan_report(physics: str, nz: int, order: int,
         "model": {k: entry[k] for k in
                   ("compute_s", "memory_s", "comm_s", "split_s", "cost_s")
                   if k in entry},
+        "cache": {"key": info.key, "hit": info.hit},
     }
 
 

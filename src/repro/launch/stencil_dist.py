@@ -52,42 +52,36 @@ import sys
 def _build_case(physics_name, shape, order, dt, grid, rng):
     """(physics, state tuple, params dict, ref_fn) for one physics.
 
+    The model itself comes from the ONE shared builder
+    (`launch.stencil_survey.build_model` — also the survey CLI's,
+    fig13's and test_survey's model); this adds the random initial state
+    and the single-device reference closure.
+
     ref_fn(nt, g, gr) -> (state tuple in state_fields order,
                           rec (nt, nrec, rec_channels))."""
     import jax.numpy as jnp
-    import numpy as np
 
-    from repro.core import boundary
     from repro.kernels import ref
     from repro.kernels import tb_physics as phys
+    from repro.launch.stencil_survey import build_model
 
-    vp = 1500.0 + 1000.0 * rng.rand(*shape)
-    damp = boundary.damping_field(shape, nbl=3,
-                                  spacing=grid.spacing).astype(jnp.float32)
     physics = phys.PHYSICS[physics_name]
+    params = build_model(physics_name, shape, grid, rng)
 
     def rand_fields(k):
         return [jnp.asarray(0.01 * rng.randn(*shape), jnp.float32)
                 for _ in range(k)]
 
     if physics_name == "acoustic":
-        m = jnp.asarray(1.0 / vp ** 2, jnp.float32)
         state = tuple(rand_fields(2))          # (u_prev, u)
-        params = {"m": m, "damp": damp}
 
         def ref_fn(nt, g, gr):
             (r0, r1), recs = ref.acoustic_reference(
-                nt, state[0], state[1], m, damp, dt,
+                nt, state[0], state[1], params["m"], params["damp"], dt,
                 grid.spacing, order, g=g, receivers=gr)
             return (r0, r1), recs[..., None]
     elif physics_name == "tti":
         from repro.core.propagators import tti as tt
-        params = {
-            "m": jnp.asarray(1.0 / vp ** 2, jnp.float32), "damp": damp,
-            "epsilon": jnp.asarray(0.2 * rng.rand(*shape), jnp.float32),
-            "delta": jnp.asarray(0.1 * rng.rand(*shape), jnp.float32),
-            "theta": jnp.asarray(0.3 * rng.randn(*shape), jnp.float32),
-            "phi": jnp.asarray(0.3 * rng.randn(*shape), jnp.float32)}
         state = tuple(rand_fields(4))          # (p, p_prev, r, r_prev)
 
         def ref_fn(nt, g, gr):
@@ -98,13 +92,6 @@ def _build_case(physics_name, shape, order, dt, grid, rng):
                     recs[..., None])
     elif physics_name == "elastic":
         from repro.core.propagators import elastic as el
-        rho = 2000.0 + 100.0 * rng.rand(*shape)
-        vs = vp / 1.9
-        params = {
-            "lam": jnp.asarray(rho * (vp ** 2 - 2 * vs ** 2) * 1e-6,
-                               jnp.float32),
-            "mu": jnp.asarray(rho * vs ** 2 * 1e-6, jnp.float32),
-            "b": jnp.asarray(1.0 / rho, jnp.float32), "damp": damp}
         state = tuple(rand_fields(9))
 
         def ref_fn(nt, g, gr):
@@ -176,11 +163,12 @@ def main():
 
     from repro.core import sources as S
     from repro.core.grid import Grid
-    from repro.core.temporal_blocking import TBPlan, plan_hierarchy
+    from repro.core.temporal_blocking import TBPlan
     from repro.distributed.halo import (DistTBPlan, dist_plan_from_hier,
                                         sharded_tb_propagate)
     from repro.kernels import tb_physics as phys
     from repro.launch import mesh as mesh_lib
+    from repro.survey.plan_cache import cached_plan_hierarchy
 
     # one candidate space for BOTH the --auto-plan build and the --dryrun
     # report, so the plan printed is the plan compiled
@@ -195,8 +183,14 @@ def main():
         common = dict(inner=args.inner,
                       per_field_halo=not args.uniform_halo)
         if args.auto_plan:
-            hier, _ = plan_hierarchy(args.physics, shape[2], order, block,
-                                     tiles=AUTO_TILES, depths=AUTO_DEPTHS)
+            # through the survey plan cache: when --dryrun already swept
+            # this configuration for its report (same candidate space),
+            # the sweep is NOT rerun here — the second consult hits
+            hier, _entry, info = cached_plan_hierarchy(
+                args.physics, shape[2], order, block,
+                tiles=AUTO_TILES, depths=AUTO_DEPTHS)
+            print(f"plan cache {'HIT' if info.hit else 'MISS'} "
+                  f"key={info.key}")
             print(f"auto-plan: outer T={hier.outer_T} "
                   f"inner T={hier.inner.T} inner tile={hier.inner.tile} "
                   f"overlap={hier.overlap} "

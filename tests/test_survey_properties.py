@@ -1,0 +1,137 @@
+"""Plan-serialization and cache-key properties (ISSUE 5 satellite).
+
+Property harness style (`tests/test_property_harness.py`): runs under the
+real hypothesis engine in CI (`pip install -e .[dev]`) and under the
+deterministic stub everywhere else — executed either way.
+
+Contracts:
+
+  * `from_dict(to_dict(plan))` is the identity for `TBPlan` and
+    `HierPlan` across generated tiles/depths/nesting/field-depth tuples,
+    INCLUDING a JSON text round trip (the disk cache's actual format);
+  * the plan-cache key is stable (same configuration -> same key) and
+    injective-in-practice (perturbing any single configuration component
+    -> different key).
+"""
+import json
+
+from _hypothesis_stub import given, hst, settings
+
+from repro.core.temporal_blocking import HierPlan, TBPlan
+from repro.survey.plan_cache import (PlanCache, cached_plan_for_physics,
+                                     plan_cache_key)
+
+
+@settings(max_examples=25, deadline=None)
+@given(tx=hst.sampled_from([4, 8, 16, 32, 64, 128, 256]),
+       ty=hst.sampled_from([4, 8, 16, 32, 64, 128, 256]),
+       T=hst.integers(1, 16), radius=hst.integers(1, 8))
+def test_tbplan_roundtrip(tx, ty, T, radius):
+    plan = TBPlan(tile=(tx, ty), T=T, radius=radius)
+    assert TBPlan.from_dict(plan.to_dict()) == plan
+    # the disk format: through actual JSON text
+    assert TBPlan.from_dict(json.loads(json.dumps(plan.to_dict()))) == plan
+
+
+@settings(max_examples=25, deadline=None)
+@given(tx=hst.sampled_from([4, 8, 16, 32]),
+       inner_T=hst.integers(1, 4), passes=hst.integers(1, 4),
+       radius=hst.integers(1, 4), bx=hst.sampled_from([32, 64, 128]),
+       overlap=hst.booleans(),
+       nfields=hst.integers(1, 9), lag=hst.integers(0, 3))
+def test_hierplan_roundtrip(tx, inner_T, passes, radius, bx, overlap,
+                            nfields, lag):
+    """Round trip across nesting depths (outer_T = passes * inner_T) and
+    generated per-field depth tuples of every physics' field count."""
+    outer_T = passes * inner_T
+    halo = outer_T * radius
+    depths = tuple(max(halo - (i % (lag + 1)) * radius, 0)
+                   for i in range(nfields))
+    hier = HierPlan(inner=TBPlan((tx, tx), inner_T, radius),
+                    outer_T=outer_T, block=(bx, bx), overlap=overlap,
+                    field_depths=depths)
+    assert HierPlan.from_dict(hier.to_dict()) == hier
+    assert HierPlan.from_dict(json.loads(json.dumps(hier.to_dict()))) == hier
+    # derived quantities survive the round trip
+    rt = HierPlan.from_dict(hier.to_dict())
+    assert rt.T == hier.T and rt.halo == hier.halo
+    assert rt.inner.overlap_factor() == hier.inner.overlap_factor()
+
+
+_BASE = dict(physics="acoustic", nz=64, order=4, block=(32, 32),
+             dtype="float32")
+_BASE_KW = dict(tiles=(8, 16, 32), depths=(1, 2, 4), link_bw=45e9,
+                link_latency=1.5e-6, vmem_budget=96 * 2 ** 20)
+
+
+def _key(**over):
+    cfg = {**_BASE, **{k: v for k, v in over.items() if k in _BASE}}
+    kw = {**_BASE_KW, **{k: v for k, v in over.items() if k not in _BASE}}
+    return plan_cache_key(cfg["physics"], cfg["nz"], cfg["order"],
+                          block=cfg["block"], dtype=cfg["dtype"], **kw)
+
+
+def test_cache_key_stable():
+    """Same configuration -> the same key, across repeated computation and
+    tuple-vs-list spellings (the JSON canonical form)."""
+    assert _key() == _key()
+    assert plan_cache_key("acoustic", 64, 4, block=[32, 32],
+                          dtype="float32", **_BASE_KW) == _key()
+    assert plan_cache_key("acoustic", 64, 4, block=(32, 32),
+                          dtype="float32",
+                          **{**_BASE_KW, "tiles": [8, 16, 32]}) == _key()
+
+
+@settings(max_examples=20, deadline=None)
+@given(field=hst.sampled_from(["physics", "nz", "order", "block", "dtype",
+                               "tiles", "depths", "link_bw",
+                               "link_latency", "vmem_budget"]))
+def test_cache_key_sensitive_to_every_component(field):
+    """Perturbing any single configuration component changes the key."""
+    perturbed = {
+        "physics": "elastic", "nz": 128, "order": 8, "block": (64, 64),
+        "dtype": "bfloat16", "tiles": (8, 16), "depths": (1, 2, 4, 8),
+        "link_bw": 90e9, "link_latency": 3e-6,
+        "vmem_budget": 48 * 2 ** 20,
+    }[field]
+    assert _key(**{field: perturbed}) != _key()
+
+
+def test_cache_key_extra_and_no_block():
+    """`key_extra` context and the block's presence both key."""
+    a = plan_cache_key("acoustic", 64, 4, **_BASE_KW)
+    b = plan_cache_key("acoustic", 64, 4, block=(32, 32), **_BASE_KW)
+    c = plan_cache_key("acoustic", 64, 4,
+                       key_extra={"grid_shape": [64, 64, 64]}, **_BASE_KW)
+    d = plan_cache_key("acoustic", 64, 4,
+                       key_extra={"grid_shape": [128, 64, 64]}, **_BASE_KW)
+    assert len({a, b, c, d}) == 4
+    # keys are filename-safe and greppable by prefix
+    for k in (a, b, c, d):
+        assert k.startswith("acoustic-64-o4")
+        assert "/" not in k and " " not in k
+
+
+def test_disk_cache_round_trip(tmp_path):
+    """A second PlanCache instance over the same directory answers from
+    disk — zero sweeps — and returns an identical plan."""
+    kw = dict(tiles=(8, 16), depths=(1, 2))
+    c1 = PlanCache(disk_dir=str(tmp_path))
+    plan1, entry1, info1 = cached_plan_for_physics(
+        "acoustic", 32, 4, cache=c1, **kw)
+    assert not info1.hit and c1.sweeps == 1
+    assert (tmp_path / f"{info1.key}.json").exists()
+
+    c2 = PlanCache(disk_dir=str(tmp_path))  # fresh process, same disk
+    plan2, entry2, info2 = cached_plan_for_physics(
+        "acoustic", 32, 4, cache=c2, **kw)
+    assert info2.hit and c2.sweeps == 0 and c2.hits == 1
+    assert plan2 == plan1
+    assert entry2["cost_s"] == entry1["cost_s"]
+
+    # a corrupt file degrades to a miss + re-sweep, never a crash
+    (tmp_path / f"{info1.key}.json").write_text("{not json")
+    c3 = PlanCache(disk_dir=str(tmp_path))
+    plan3, _, info3 = cached_plan_for_physics(
+        "acoustic", 32, 4, cache=c3, **kw)
+    assert not info3.hit and plan3 == plan1
